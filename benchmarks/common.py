@@ -1,0 +1,34 @@
+"""Shared benchmark utilities: CSV emission + result capture."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from contextlib import contextmanager
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
+
+
+def ensure_out() -> str:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    return OUT_DIR
+
+
+def emit(name: str, value, derived: str = "") -> None:
+    """One CSV row: name,value,derived (the benchmarks.run contract)."""
+    print(f"{name},{value},{derived}", flush=True)
+
+
+def save_json(fname: str, payload) -> str:
+    ensure_out()
+    path = os.path.join(OUT_DIR, fname)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    return path
+
+
+@contextmanager
+def timed(label: str):
+    t0 = time.perf_counter()
+    yield
+    emit(f"{label}.wall_s", round(time.perf_counter() - t0, 2))

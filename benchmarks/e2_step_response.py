@@ -1,0 +1,55 @@
+"""E2: inner-loop step response 280 -> 200 W (paper Fig. 2).
+
+Reproduces the 18 / 21 / 29 ms (matmul / inference / bursty) settling to
+the +/-2 % band.  Per the two-regime governor (EXPERIMENTS.md): E2
+characterises the inner-loop (first-order) response; the out-of-band
+large-activation path is slew-bound and measured by E7.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, save_json
+from repro.core import plant
+
+STEP_FROM, STEP_TO = 280.0, 200.0
+PAPER = {"matmul": 18, "inference": 21, "bursty": 29}
+
+
+def settle_ms(workload: str, n_trials: int = 20, seed: int = 0) -> list:
+    tau = plant.workload_tau_ms(workload)
+    rng = np.random.default_rng(seed)
+    out = []
+    for t in range(n_trials):
+        st = dataclasses.replace(
+            plant.init_plant(1, cap=300.0),
+            power=jnp.array([STEP_FROM + rng.normal(0, 0.8)]))
+        st = plant.write_cap(st, STEP_TO)
+        trace = []
+        for k in range(120):  # 120 ms at 1 kHz telemetry resolution
+            st = plant.plant_step(st, jnp.array([0.97]), 1.0, tau_ms=tau)
+            trace.append(float(st.power[0]) + rng.normal(0, 0.4))
+        trace = np.array(trace)
+        inband = np.abs(trace - STEP_TO) <= 0.02 * STEP_TO
+        settle = next((k for k in range(len(trace)) if inband[k:].all()),
+                      None)
+        out.append(settle if settle is not None else len(trace))
+    return out
+
+
+def run() -> dict:
+    results = {}
+    for w in plant.WORKLOADS:
+        s = settle_ms(w)
+        med = float(np.median(s))
+        results[w] = med
+        emit(f"e2.settle_ms.{w}", med, f"paper: {PAPER[w]}")
+    save_json("e2_settle.json", results)
+    return results
+
+
+if __name__ == "__main__":
+    run()

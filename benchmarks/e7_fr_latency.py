@@ -1,0 +1,132 @@
+"""E7: end-to-end FR actuation latency, 90 trials (paper Fig. 3c).
+
+    L_e2e = L_trigger + L_decide + L_actuate + L_settle
+
+L_trigger/L_decide/L_write are MEASURED wall-clock on this host through
+the real safety island (UDP socket -> table lookup -> register-file
+store).  L_actuate adds the NVML cap-update constant (~5 ms [29]);
+L_settle comes from the plant at the paper's constants (slew-governed
+large activation).  The contrast arm routes the same trigger through the
+Python supervisor under allocation churn -- the paper's "p99 > 250 ms"
+failure mode.
+
+Paper: median 97.2 ms, max 101.1 ms, 90/90 under the 700 ms Nordic FFR
+budget (~6.9x margin).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, save_json
+from repro.core import island as island_lib
+from repro.core import plant, tier3
+from repro.grid.markets import FR_PRODUCTS
+
+TRIALS_PER_WORKLOAD = 30
+PORT = 47611
+
+
+def settle_ms_sim(workload: str, rng) -> float:
+    """Plant settle from the armed operating point to 95 % of the step,
+    through the slew-governed firmware path."""
+    tau = plant.workload_tau_ms(workload)
+    p0 = {"matmul": 280.0, "inference": 197.0, "bursty": 280.0}[workload]
+    target = 200.0 if p0 > 210.0 else 140.0
+    st = dataclasses.replace(plant.init_plant(1, cap=300.0),
+                             power=jnp.array([p0 + rng.normal(0, 1.0)]))
+    st = plant.write_cap(st, target)  # includes the 5 ms NVML window
+    load = {"matmul": 0.97, "inference": 0.58, "bursty": 0.95}[workload]
+    cross = p0 - 0.95 * (p0 - target)
+    for k in range(1, 400):
+        st = plant.plant_step(st, jnp.array([load]), 1.0, tau_ms=tau,
+                              slew_w_ms=plant.GOV_SLEW)
+        if float(st.power[0]) <= cross:
+            return float(k)
+    return 400.0
+
+
+def run() -> dict:
+    rng = np.random.default_rng(7)
+    rows = tier3.cap_table(3, 900.0, 100.0, 300.0).reshape(-1)
+    table = np.repeat(rows[:, None], 3, axis=1)
+    isl = island_lib.SafetyIsland(3, table, port=PORT)
+    isl.arm(23)
+    isl.start()
+    time.sleep(0.1)
+
+    per_workload: dict[str, list] = {w: [] for w in plant.WORKLOADS}
+    dispatch_us = []
+    try:
+        for w in plant.WORKLOADS:
+            for i in range(TRIALS_PER_WORKLOAD):
+                n0 = isl.trigger_count
+                t_send = isl.send_trigger(op_index=23, freq_hz=49.45)
+                assert isl.wait_for_trigger(n0, timeout_s=2.0), "lost trigger"
+                t_done = isl.last_trigger_ns
+                wall_ms = (t_done - t_send) / 1e6  # trigger->caps written
+                dispatch_us.append(wall_ms * 1e3)
+                settle = settle_ms_sim(w, rng)
+                # wall includes trigger+decide+write; plant sim includes the
+                # 5 ms NVML window + slew ramp to the 95 % crossing.
+                per_workload[w].append(wall_ms + settle)
+                # randomised inter-trial delay (scaled from the paper's
+                # 5-30 s to keep the benchmark fast; defeats caching)
+                time.sleep(float(rng.uniform(0.002, 0.01)))
+    finally:
+        isl.stop()
+
+    all_lat = np.concatenate([per_workload[w] for w in plant.WORKLOADS])
+    budget = FR_PRODUCTS["FFR"].activation_budget_ms
+    for w, paper in (("matmul", 97.2), ("inference", 97.5), ("bursty", 97.8)):
+        emit(f"e7.median_ms.{w}", round(float(np.median(per_workload[w])), 1),
+             f"paper: {paper}")
+    emit("e7.median_ms", round(float(np.median(all_lat)), 1), "paper: 97.2")
+    emit("e7.max_ms", round(float(np.max(all_lat)), 1), "paper: 101.1")
+    emit("e7.pass_rate", f"{int((all_lat < budget).sum())}/{len(all_lat)}",
+         "paper: 90/90 at 700 ms")
+    emit("e7.safety_margin_x",
+         round(budget / float(np.median(all_lat)), 1), "paper: ~6.9")
+    emit("e7.island_dispatch_us_median",
+         round(float(np.median(dispatch_us)), 1),
+         "trigger->caps visible, measured")
+
+    # contrast arm: Python supervisor under churn
+    sup = island_lib.PythonSupervisor(3, table)
+    churn = island_lib.AllocationChurn()
+    sup.start()
+    churn.start()
+    sup_lat = []
+    try:
+        for i in range(90):
+            t0 = sup.send_trigger(op_index=23, freq_hz=49.45)
+            t1 = sup.wait_done()
+            sup_lat.append((t1 - t0) / 1e6)
+            time.sleep(float(rng.uniform(0.002, 0.01)))
+    finally:
+        churn.stop()
+        sup.stop()
+    sup_lat = np.array(sup_lat)
+    emit("e7.supervisor_dispatch_ms_median",
+         round(float(np.median(sup_lat)), 2), "same path, no bypass")
+    emit("e7.supervisor_dispatch_ms_p99",
+         round(float(np.percentile(sup_lat, 99)), 2),
+         "paper: >250 ms incl. GC pauses on their stack")
+    emit("e7.island_vs_supervisor_p99_x",
+         round(float(np.percentile(sup_lat, 99)
+                     / max(np.percentile(dispatch_us, 99) / 1e3, 1e-6)), 1),
+         "bypass advantage at the tail")
+
+    out = {"island_ms": {w: list(map(float, v))
+                         for w, v in per_workload.items()},
+           "supervisor_ms": sup_lat.tolist(),
+           "dispatch_us": list(map(float, dispatch_us))}
+    save_json("e7_latency.json", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,147 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""§Perf hillclimb driver: three selected (arch x shape) pairs, measured
+through the same FD-corrected roofline protocol as the baseline table.
+
+  A  smollm-135m x train_4k      worst roofline fraction + the arch the
+                                 GridPilot end-to-end example trains
+  B  qwen2-1.5b  x train_4k      largest absolute DP collective (1.5 B
+                                 replicated params all-reduced every step)
+  C  command-r-plus-104b x decode_32k   the SPMD involuntary-remat reshard
+
+Each variant prints (flops, bytes, coll) per device + the three roofline
+terms; results land in benchmarks/out/hillclimb.json and the narrative
+goes into EXPERIMENTS.md §Perf.
+"""
+import dataclasses
+import json
+import sys
+
+import jax
+import jax.numpy as jnp
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+from benchmarks.roofline import (HBM_BW, LINK_BW, PEAK_FLOPS, CHIPS, OUT,
+                                 model_flops)
+from repro.configs import SHAPES, get_arch
+from repro.launch.dryrun import collective_bytes
+from repro.launch.mesh import make_production_mesh
+from repro.train.step import build_step_bundle
+
+import numpy as np
+
+
+def measure(cfg, shape, mesh, **bundle_kw):
+    bundle = build_step_bundle(cfg, shape, mesh, unroll=True, **bundle_kw)
+    compiled = bundle.lower().compile()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    coll = collective_bytes(compiled.as_text())
+    return (float(ca.get("flops", 0)), float(ca.get("bytes accessed", 0)),
+            float(coll["total_bytes"]), coll["count_by_op"])
+
+
+def fd_train(cfg, shape, mesh, **kw):
+    """2-depth FD at microbatches=1, batch=B/k (consistent protocol)."""
+    k = cfg.plan.microbatches
+    b1 = shape.global_batch // k
+    sh = dataclasses.replace(shape, global_batch=b1)
+
+    def at(n):
+        c = dataclasses.replace(
+            cfg, num_layers=n,
+            plan=dataclasses.replace(cfg.plan, microbatches=1))
+        return np.array(measure(c, sh, mesh, **kw)[:3])
+
+    f2, f4 = at(2), at(4)
+    per = (f4 - f2) / 2.0
+    L = cfg.num_layers
+    total = f2 - 2 * per + L * per
+    # scale the per-mb loss work by k (optimizer ~ small; documented approx)
+    return np.maximum(total * (k if k > 1 else 1.0), 0.0)
+
+
+def fd_decode(cfg, shape, mesh, **kw):
+    def at(n):
+        c = dataclasses.replace(cfg, num_layers=n)
+        return np.array(measure(c, shape, mesh, **kw)[:3])
+
+    f2, f4 = at(2), at(4)
+    per = (f4 - f2) / 2.0
+    return np.maximum(f2 - 2 * per + cfg.num_layers * per, 0.0)
+
+
+def report(tag, cfg, shape, vals):
+    c, m, x = (vals[0] / PEAK_FLOPS, vals[1] / HBM_BW, vals[2] / LINK_BW)
+    dom = max(("compute", c), ("memory", m), ("collective", x),
+              key=lambda t: t[1])
+    useful = model_flops(cfg, shape) / CHIPS / PEAK_FLOPS
+    frac = useful / max(dom[1], 1e-30)
+    print(f"{tag:44s} c={c*1e3:9.1f}ms m={m*1e3:9.1f}ms x={x*1e3:9.1f}ms "
+          f"dom={dom[0]:10s} frac={frac:.4f}", flush=True)
+    return {"tag": tag, "compute_s": c, "memory_s": m, "collective_s": x,
+            "dominant": dom[0], "frac": frac,
+            "flops": vals[0], "bytes": vals[1], "coll": vals[2]}
+
+
+def main():
+    mesh = make_production_mesh(multi_pod=False)
+    rows = []
+
+    # ---------------- Pair A: smollm-135m x train_4k --------------------
+    cfg = get_arch("smollm-135m")
+    shape = SHAPES["train_4k"]
+    rows.append(report("A0 smollm train baseline (f32 params)",
+                       cfg, shape, fd_train(cfg, shape, mesh)))
+    # A1: store params in bf16 (f32 optimizer moments stay)
+    rows.append(report("A1 smollm train bf16 params",
+                       cfg, shape, fd_train(cfg, shape, mesh,
+                                            model_kw={"param_dtype":
+                                                      jnp.bfloat16})))
+    # A2: bf16 params + int8 EF compressed DP all-reduce
+    rows.append(report("A2 smollm train bf16 + int8-EF allreduce",
+                       cfg, shape, fd_train(cfg, shape, mesh,
+                                            compressed=True,
+                                            model_kw={"param_dtype":
+                                                      jnp.bfloat16})))
+
+    # ---------------- Pair B: qwen2-1.5b x train_4k ---------------------
+    cfg = get_arch("qwen2-1.5b")
+    shape = SHAPES["train_4k"]
+    rows.append(report("B0 qwen2 train baseline",
+                       cfg, shape, fd_train(cfg, shape, mesh)))
+    rows.append(report("B1 qwen2 train int8-EF allreduce",
+                       cfg, shape, fd_train(cfg, shape, mesh,
+                                            compressed=True)))
+    rows.append(report("B2 qwen2 train bf16 + int8-EF",
+                       cfg, shape, fd_train(cfg, shape, mesh,
+                                            compressed=True,
+                                            model_kw={"param_dtype":
+                                                      jnp.bfloat16})))
+
+    # ---------------- Pair C: command-r x decode_32k --------------------
+    cfg = get_arch("command-r-plus-104b")
+    shape = SHAPES["decode_32k"]
+    rows.append(report("C0 cmdr decode baseline",
+                       cfg, shape, fd_decode(cfg, shape, mesh)))
+    cfg_fix = dataclasses.replace(
+        cfg, plan=dataclasses.replace(cfg.plan, decode_seq_constraint=True))
+    rows.append(report("C1 cmdr decode seq-pinned KV",
+                       cfg_fix, shape, fd_decode(cfg_fix, shape, mesh)))
+    # C2: bf16 params for decode (weights dominate decode bytes)
+    rows.append(report("C2 cmdr decode seq-pinned + bf16 params",
+                       cfg_fix, shape,
+                       fd_decode(cfg_fix, shape, mesh,
+                                 model_kw={"param_dtype": jnp.bfloat16})))
+
+    os.makedirs(OUT, exist_ok=True)
+    with open(os.path.join(OUT, "hillclimb.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,301 @@
+import os
+import sys
+if "--compute" in sys.argv:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Roofline analysis per (arch x shape) on the single-pod production mesh.
+
+Terms (per chip, seconds):
+    compute    = HLO_FLOPs / 197e12          memory = HLO_bytes / 819e9
+    collective = collective_bytes / 50e9
+with HLO_FLOPs/bytes from compiled.cost_analysis() and collective bytes
+parsed from compiled.as_text().
+
+Measurement protocol -- "small-depth unroll finite differences".
+cost_analysis() counts `while` (scan) bodies once, so a scanned deep model
+under-reports by ~L x.  Instead of unrolling the full depth (minutes of
+compile per cell), each cell is lowered UNROLLED at two small depths; the
+per-layer cost is their exact difference (layers are identical), and the
+full-depth total extrapolates linearly:
+
+    f(l) = outer + l * per_layer        (prefill / decode: 2 lowers)
+
+Train cells additionally separate the optimizer sweep from the per-
+microbatch loss/grad work by a second batch size (4 lowers):
+
+    f(l, b) = [lossO(b) + l*lossL(b)] + [optO + l*optL],  loss* ~ b
+    total   = k * loss(L, B/k) + opt(L)
+
+The same linear model corrects bytes and parsed collective bytes.
+Validated against analytic 6ND (see EXPERIMENTS.md §Roofline).
+
+--compute runs the sweep (512-device env, set above) -> out/roofline.json;
+without it, reads the cache and emits the table (benchmarks.run path).
+"""
+import argparse
+import dataclasses
+import json
+
+import numpy as np
+
+PEAK_FLOPS = 197e12     # bf16 / chip (TPU v5e-class)
+HBM_BW = 819e9          # B/s
+LINK_BW = 50e9          # B/s ICI per link
+CHIPS = 256             # single-pod
+
+OUT = os.path.join(os.path.dirname(__file__), "out")
+
+
+def model_flops(cfg, shape) -> float:
+    """Useful work: 6ND train / 2ND prefill / 2NB decode; MoE active-only."""
+    n = cfg.active_param_count() if cfg.is_moe else cfg.param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.tokens
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.tokens
+    return 2.0 * n * shape.global_batch
+
+
+# ---------------------------------------------------------------------------
+# sweep internals (512-device process only)
+# ---------------------------------------------------------------------------
+
+
+def _measure(cfg, shape, mesh) -> np.ndarray:
+    from repro.launch.dryrun import collective_bytes
+    from repro.train.step import build_step_bundle
+
+    bundle = build_step_bundle(cfg, shape, mesh, unroll=True)
+    compiled = bundle.lower().compile()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    coll = collective_bytes(compiled.as_text())["total_bytes"]
+    return np.array([float(ca.get("flops", 0.0)),
+                     float(ca.get("bytes accessed", 0.0)), float(coll)])
+
+
+def _at_depth(cfg, n):
+    """Config at a small depth; returns (cfg', unit_count_at_full_depth)."""
+    if cfg.family == "hybrid":
+        # repeating unit = one chunk (shared block + hybrid_period mamba2)
+        return (dataclasses.replace(cfg, num_layers=n * cfg.hybrid_period),
+                cfg.num_layers // cfg.hybrid_period)
+    return dataclasses.replace(cfg, num_layers=n), cfg.num_layers
+
+
+def _with_batch(shape, b):
+    return dataclasses.replace(shape, global_batch=b)
+
+
+def _with_mb(cfg, k):
+    return dataclasses.replace(
+        cfg, plan=dataclasses.replace(cfg.plan, microbatches=k))
+
+
+def fd_cell(cfg, shape, mesh) -> dict:
+    l1, l2 = 2, 4
+
+    if cfg.family == "encdec":
+        return fd_cell_encdec(cfg, shape, mesh)
+
+    if shape.kind == "train":
+        k = cfg.plan.microbatches
+        b1 = shape.global_batch // k
+        b2 = max(b1 // 2, 1)
+        cfgs = {n: _with_mb(_at_depth(cfg, n)[0], 1) for n in (l1, l2)}
+        L = _at_depth(cfg, l1)[1]
+        f = {(n, b): _measure(cfgs[n], _with_batch(shape, b), mesh)
+             for n in (l1, l2) for b in (b1, b2)}
+        dL_b1 = (f[(l2, b1)] - f[(l1, b1)]) / (l2 - l1)
+        dL_b2 = (f[(l2, b2)] - f[(l1, b2)]) / (l2 - l1)
+        # loss scales ~ b; optimizer is b-invariant
+        scale = b1 / b2
+        optL = (scale * dL_b2 - dL_b1) / (scale - 1.0)
+        lossL_b1 = dL_b1 - optL
+        out_b1 = f[(l1, b1)] - l1 * dL_b1
+        out_b2 = f[(l1, b2)] - l1 * dL_b2
+        optO = (scale * out_b2 - out_b1) / (scale - 1.0)
+        lossO_b1 = out_b1 - optO
+        total = k * (lossO_b1 + L * lossL_b1) + optO + L * optL
+        raw = f[(l1, b1)]
+    else:
+        cfg1, L = _at_depth(cfg, l1)
+        cfg2, _ = _at_depth(cfg, l2)
+        f1 = _measure(cfg1, shape, mesh)
+        f2 = _measure(cfg2, shape, mesh)
+        per = (f2 - f1) / (l2 - l1)
+        total = f1 - l1 * per + L * per
+        raw = f1
+
+    total = np.maximum(total, 0.0)
+    return {"flops": float(total[0]), "bytes": float(total[1]),
+            "coll_bytes": float(total[2]),
+            "raw_small": [float(x) for x in raw]}
+
+
+def fd_cell_encdec(cfg, shape, mesh) -> dict:
+    le, ld = cfg.encoder_layers, cfg.num_layers
+
+    def cfg_at(e, d):
+        c = dataclasses.replace(cfg, encoder_layers=e, num_layers=d)
+        return _with_mb(c, 1) if shape.kind == "train" else c
+
+    if shape.kind == "train":
+        k = cfg.plan.microbatches
+        b1 = shape.global_batch // k
+        bs = [b1, max(b1 // 2, 1)]
+    else:
+        k = 1
+        bs = [shape.global_batch]
+
+    res = {}
+    for b in bs:
+        sh = _with_batch(shape, b)
+        f22 = _measure(cfg_at(2, 2), sh, mesh)
+        f42 = _measure(cfg_at(4, 2), sh, mesh)
+        f24 = _measure(cfg_at(2, 4), sh, mesh)
+        pe = (f42 - f22) / 2.0
+        pd = (f24 - f22) / 2.0
+        res[b] = (f22 - 2 * pe - 2 * pd, pe, pd)
+    if len(bs) == 1:
+        out, pe, pd = res[bs[0]]
+        total = out + le * pe + ld * pd
+    else:
+        b1, b2 = bs
+        scale = b1 / b2
+        comp = []
+        for i in range(3):  # outer, per-enc, per-dec
+            v1, v2 = res[b1][i], res[b2][i]
+            opt = (scale * v2 - v1) / (scale - 1.0)
+            loss = v1 - opt
+            comp.append((opt, loss))
+        total = (comp[0][0] + le * comp[1][0] + ld * comp[2][0]
+                 + k * (comp[0][1] + le * comp[1][1] + ld * comp[2][1]))
+    total = np.maximum(total, 0.0)
+    return {"flops": float(total[0]), "bytes": float(total[1]),
+            "coll_bytes": float(total[2]), "raw_small": []}
+
+
+def compute_sweep(arch=None, shape_name=None) -> list:
+    import jax
+    assert len(jax.devices()) == 512
+    from repro.configs.base import dryrun_cells
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=False)
+    path = os.path.join(OUT, "roofline.json")
+    os.makedirs(OUT, exist_ok=True)
+    # resume: keep rows for cells we are not re-running (incremental saves)
+    done: dict[tuple, dict] = {}
+    if os.path.exists(path):
+        for r in json.load(open(path)):
+            done[(r["arch"], r["shape"])] = r
+    rows = []
+
+    def _flush():
+        with open(path, "w") as f:
+            json.dump(rows + [v for k, v in done.items()
+                              if k not in {(r["arch"], r["shape"])
+                                           for r in rows}],
+                      f, indent=1)
+
+    cells = sorted(dryrun_cells(),
+                   key=lambda c: c[0].param_count())  # smallest first
+    for cfg, shape, ok, why in cells:
+        if arch and cfg.name != arch:
+            continue
+        if shape_name and shape.name != shape_name:
+            continue
+        prev = done.get((cfg.name, shape.name))
+        if prev and prev.get("status") == "ok" and not (arch or shape_name):
+            rows.append(prev)
+            continue
+        if not ok:
+            rows.append({"arch": cfg.name, "shape": shape.name,
+                         "status": "skip", "reason": why})
+            _flush()
+            continue
+        try:
+            import time
+            t0 = time.time()
+            rec = fd_cell(cfg, shape, mesh)
+            rec.update({"arch": cfg.name, "shape": shape.name,
+                        "status": "ok", "kind": shape.kind,
+                        "model_flops": model_flops(cfg, shape),
+                        "sweep_s": round(time.time() - t0, 1)})
+            rows.append(rec)
+            print(f"FD   {cfg.name} x {shape.name}: "
+                  f"flops={rec['flops']:.3e} bytes={rec['bytes']:.3e} "
+                  f"coll={rec['coll_bytes']:.3e} ({rec['sweep_s']}s)",
+                  flush=True)
+        except Exception as e:  # noqa: BLE001
+            import traceback
+            traceback.print_exc()
+            rows.append({"arch": cfg.name, "shape": shape.name,
+                         "status": "fail", "error": str(e)})
+            print(f"FAIL {cfg.name} x {shape.name}: {e}", flush=True)
+        _flush()
+    _flush()
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# table (reads cache; safe in any process)
+# ---------------------------------------------------------------------------
+
+
+def terms_from_row(r) -> dict:
+    comp = r["flops"] / PEAK_FLOPS
+    mem = r["bytes"] / HBM_BW
+    coll = r["coll_bytes"] / LINK_BW
+    dom = max(("compute", comp), ("memory", mem), ("collective", coll),
+              key=lambda t: t[1])
+    useful_s = r["model_flops"] / CHIPS / PEAK_FLOPS
+    return {"compute_s": comp, "memory_s": mem, "collective_s": coll,
+            "dominant": dom[0],
+            "roofline_frac": useful_s / max(dom[1], 1e-30),
+            "useful_ratio": r["model_flops"] / CHIPS / max(r["flops"],
+                                                           1e-30)}
+
+
+def load_rows():
+    path = os.path.join(OUT, "roofline.json")
+    if not os.path.exists(path):
+        return []
+    return json.load(open(path))
+
+
+def emit_table() -> list:
+    from benchmarks.common import emit
+    rows = load_rows()
+    if not rows:
+        emit("roofline.status", "missing",
+             "run: python -m benchmarks.roofline --compute")
+        return []
+    out = []
+    for r in rows:
+        if r.get("status") != "ok":
+            continue
+        t = terms_from_row(r)
+        out.append({**r, **t})
+        emit(f"roofline.{r['arch']}.{r['shape']}",
+             round(t["roofline_frac"], 4),
+             f"dom={t['dominant']} c={t['compute_s']:.2e}s "
+             f"m={t['memory_s']:.2e}s x={t['collective_s']:.2e}s")
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--compute", action="store_true")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    args = ap.parse_args(argv)
+    if args.compute:
+        compute_sweep(args.arch, args.shape)
+    else:
+        emit_table()
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

@@ -1,0 +1,81 @@
+"""The paper's worked example (Sect. 2): what GridPilot does in one second.
+
+    PYTHONPATH=src python examples/grid_response.py
+
+Reproduces the timeline on this host: a TSO trigger arrives over UDP, the
+safety island writes precomputed caps (measured wall-clock), the Tier-1
+PID + plant settle (simulated at the paper's constants), Tier-2 rebalances
+at its next tick, and the facility-meter delta is evaluated through the
+PUE model.
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import dataclasses
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import island as island_lib
+from repro.core import plant, tier3
+import repro.core.pue as pue_lib
+
+
+def main():
+    n_chips = 30  # a 10-rack slice; same physics as the paper's 3 GPUs
+    rows = tier3.cap_table(3, 900.0, 100.0, 300.0).reshape(-1)
+    table = np.repeat(rows[:, None], n_chips, axis=1)
+    isl = island_lib.SafetyIsland(n_chips, table, port=47127)
+    isl.arm(23)  # (mu=0.9, rho=0.3)
+    isl.start()
+    time.sleep(0.05)
+
+    print("t=0 ms      grid frequency crosses 49.7 Hz; TSO trigger sent")
+    n0 = isl.trigger_count
+    t_send = isl.send_trigger(op_index=23, freq_hz=49.5)
+    isl.wait_for_trigger(n0)
+    t_caps = (isl.last_trigger_ns - t_send) / 1e6
+    i = (isl.stats.count - 1) % isl.stats.capacity
+    print(f"t={t_caps:.3f} ms   island: trigger read, row looked up "
+          f"({isl.stats.decide_ns[i]/1e3:.1f} us), caps written "
+          f"({isl.stats.write_ns[i]/1e3:.1f} us)  [measured]")
+    print(f"t={t_caps+5:.1f} ms   NVML cap-update latency window elapses "
+          "(~5 ms, [29])")
+
+    # plant settle at the paper's constants (slew-governed big activation)
+    st = dataclasses.replace(plant.init_plant(n_chips, cap=300.0),
+                             power=jnp.full((n_chips,), 280.0))
+    st = plant.write_cap(st, jnp.asarray(isl.caps))
+    target = float(isl.caps[0])
+    cross = 280.0 - 0.95 * (280.0 - target)
+    t_ms = t_caps
+    settle = None
+    for k in range(300):
+        st = plant.plant_step(st, jnp.full((n_chips,), 0.97), 1.0,
+                              tau_ms=4.33, slew_w_ms=plant.GOV_SLEW)
+        t_ms += 1.0
+        if settle is None and float(st.power.mean()) <= cross:
+            settle = t_ms
+            break
+    print(f"t={settle:.1f} ms  chip power crosses 95 % of the new "
+          f"{target:.0f} W target  [plant sim]")
+    print("t=1000 ms   Tier-2 AR(4) tick rebalances caps inside the host "
+          "envelope")
+
+    # meter-side accounting
+    mu, rho = 0.9, 0.3
+    gain = float(pue_lib.ffr_meter_gain(mu, rho, 15.0))
+    print(f"\nmeter check: IT shed {rho:.0%} of design power; facility "
+          f"delta = {gain:.3f} x IT delta")
+    print(f"vs a static-PUE commitment ({pue_lib.PUE_DESIGN}): "
+          f"{100*gain/pue_lib.PUE_DESIGN:.1f} % delivered -- the gap the "
+          "PUE-aware Tier-3 closes (paper Sect. 3.3)")
+    budget = 700.0
+    print(f"\nend-to-end: {settle:.1f} ms vs the {budget:.0f} ms Nordic "
+          f"FFR budget -> {budget/settle:.1f}x margin (paper: ~6.9x)")
+    isl.stop()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""GridPilot core: the paper's primary contribution in JAX.
+
+Tier-1 (pid), Tier-2 (ar4), Tier-3 (tier3), safety island (island),
+four-component PUE model (pue), Algorithm 1 dispatch (dispatch), the V100
+power/thermal plant (plant), the multiscale digital twin (twin), and the
+trainer-facing composition (controller).
+"""
+from repro.core.controller import GridPilot, PowerPlan, plan_from_operating_point
+from repro.core.plant import PlantState, init_plant, plant_step, power_model
+from repro.core.pid import PIDState, init_pid, pid_step, pid_rollout
+from repro.core.ar4 import RLSState, init_rls, predict, rls_update
+from repro.core.tier3 import Tier3Selector, OperatingPoint, q_ffr, cap_table
+# NB: the `pue` *function* is exported as `instantaneous_pue` so the package
+# attribute `repro.core.pue` keeps pointing at the submodule.
+from repro.core.pue import pue as instantaneous_pue
+from repro.core.pue import facility_power, free_cooling_fraction
+from repro.core.island import SafetyIsland, PythonSupervisor
+from repro.core.dispatch import GridPilotDispatcher, Job
+from repro.core.twin import TwinConfig, run_twin, net_co2_decomposition
+
+__all__ = [
+    "GridPilot", "PowerPlan", "plan_from_operating_point",
+    "PlantState", "init_plant", "plant_step", "power_model",
+    "PIDState", "init_pid", "pid_step", "pid_rollout",
+    "RLSState", "init_rls", "predict", "rls_update",
+    "Tier3Selector", "OperatingPoint", "q_ffr", "cap_table",
+    "instantaneous_pue", "facility_power", "free_cooling_fraction",
+    "SafetyIsland", "PythonSupervisor",
+    "GridPilotDispatcher", "Job",
+    "TwinConfig", "run_twin", "net_co2_decomposition",
+]

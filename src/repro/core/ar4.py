@@ -1,0 +1,108 @@
+"""Tier-2: per-host AR(4) utilisation predictor fitted by RLS (paper Eq. 2).
+
+    u_hat(t+1) = sum_{i=1..4} alpha_i u(t-i+1)
+
+fitted by Recursive Least Squares over a 30 s rolling window with forgetting
+factor lambda = 0.97 (~60 s effective memory) at a 1 Hz tick.  Order 4 is the
+paper's AIC choice.  The coordinator uses the prediction to rebalance
+per-chip caps inside the host envelope one second ahead.
+
+Pure-JAX vector form: state batches over hosts, so the 100-host (or
+10 000-host) twin runs Tier-2 as one fused update.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+ORDER = 4
+FORGET = 0.97
+WINDOW_S = 30
+TICK_HZ = 1.0
+
+
+class RLSState(NamedTuple):
+    theta: jax.Array   # (n, ORDER) AR coefficients
+    P: jax.Array       # (n, ORDER, ORDER) inverse covariance
+    hist: jax.Array    # (n, ORDER) most recent samples, hist[:,0] = newest
+    steps: jax.Array   # (n,) samples seen
+
+
+def init_rls(n: int, p0: float = 100.0) -> RLSState:
+    eye = jnp.broadcast_to(jnp.eye(ORDER, dtype=jnp.float32), (n, ORDER, ORDER))
+    return RLSState(
+        theta=jnp.zeros((n, ORDER), jnp.float32).at[:, 0].set(1.0),
+        P=eye * p0,
+        hist=jnp.zeros((n, ORDER), jnp.float32),
+        steps=jnp.zeros((n,), jnp.int32),
+    )
+
+
+def predict(state: RLSState) -> jax.Array:
+    """One-step-ahead prediction u_hat(t+1) per host."""
+    return jnp.einsum("ni,ni->n", state.theta, state.hist)
+
+
+def rls_update(state: RLSState, u_new: jax.Array,
+               lam: float = FORGET) -> tuple[RLSState, jax.Array]:
+    """Observe u(t+1) = u_new, update theta, slide the window.
+
+    Returns (new_state, prediction_error) where the error is the a-priori
+    one-step error |u_new - u_hat| used for the E3 MAE metric.
+
+    Feed NORMALISED series (utilisation in [0,1], or power / design power):
+    float32 RLS on O(100)-magnitude inputs loses positive-definiteness of P
+    through catastrophic cancellation.  Errors scale back linearly.
+    """
+    phi = state.hist  # regressor: last ORDER samples
+    y_hat = jnp.einsum("ni,ni->n", state.theta, phi)
+    err = u_new - y_hat
+
+    # RLS with forgetting
+    Pphi = jnp.einsum("nij,nj->ni", state.P, phi)
+    denom = lam + jnp.einsum("ni,ni->n", phi, Pphi)
+    k = Pphi / denom[:, None]
+    theta = state.theta + k * err[:, None]
+    P = (state.P - k[:, :, None] * Pphi[:, None, :]) / lam
+    # enforce symmetry (float32 drift) + covariance ceiling: forgetting
+    # under poor excitation blows P up exponentially (classic RLS windup).
+    P = 0.5 * (P + jnp.swapaxes(P, -1, -2))
+    tr = jnp.trace(P, axis1=-2, axis2=-1)
+    max_tr = 1e4 * ORDER
+    P = P * jnp.minimum(max_tr / jnp.maximum(tr, 1e-9), 1.0)[:, None, None]
+    # warmup: do not trust the model until the window has ORDER+1 samples
+    warm = (state.steps >= ORDER)[:, None]
+    theta = jnp.where(warm, theta, state.theta)
+    P = jnp.where(warm[..., None], P, state.P)
+
+    hist = jnp.concatenate([u_new[:, None], state.hist[:, :-1]], axis=1)
+    new = RLSState(theta=theta, P=P, hist=hist, steps=state.steps + 1)
+    return new, jnp.abs(err)
+
+
+def host_rebalance(pred_host_power, host_envelope, chip_power,
+                   cap_min: float, cap_max: float) -> jax.Array:
+    """Split the host envelope into per-chip caps proportionally to demand.
+
+    pred_host_power: (H,) Tier-2 prediction of next-second host power.
+    host_envelope:   (H,) Tier-3 setpoint for each host.
+    chip_power:      (H, C) current per-chip power (demand proxy).
+
+    If the predicted host power exceeds the envelope, each chip's cap is its
+    demand scaled by envelope/prediction (proportional shedding); otherwise
+    caps relax toward cap_max.  Floors/ceilings keep each chip in range.
+    """
+    scale = jnp.where(
+        pred_host_power > host_envelope,
+        host_envelope / jnp.maximum(pred_host_power, 1e-3),
+        1.0,
+    )  # (H,)
+    share = chip_power * scale[:, None]
+    headroom = jnp.maximum(
+        host_envelope[:, None] - jnp.sum(share, axis=1, keepdims=True), 0.0
+    )
+    n_chips = chip_power.shape[1]
+    caps = share + headroom / n_chips
+    return jnp.clip(caps, cap_min, cap_max)

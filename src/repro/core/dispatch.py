@@ -1,0 +1,247 @@
+"""GridPilot-PUE dispatch loop (paper Algorithm 1).
+
+The composite deferral signal -- the paper's new mechanism -- is
+
+    sigma(t) = CI(t) * PUE(t, L, T_amb)
+
+normalised over a 24 h look-ahead window: defer when sigma exceeds the
+local 66th percentile, dispatch otherwise.  Components:
+
+  * aging budget  beta_j = wait_j / d_max_j  with a 0.7 cutoff,
+  * 80 % power cap on running jobs during high-sigma windows (EcoFreq),
+  * elastic replica scaling inversely to sigma for the first 30 % of
+    elastic jobs,
+  * EASY backfill of short jobs into freed nodes.
+
+The hourly scheduler itself is plain Python (it is control plane, not data
+plane); the power/carbon integration it feeds runs in JAX via the twin.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import numpy as np
+
+import repro.core.pue as pue_lib
+
+SIGMA_PCT = 66.0
+BETA_CUTOFF = 0.7
+HIGH_SIGMA_CAP = 0.8        # EcoFreq default 80 % power-cap factor
+ELASTIC_FRACTION = 0.3      # first 30 % of elastic jobs scale replicas
+SHORT_JOB_H = 2.0           # EASY backfill / "not short" threshold
+LOOKAHEAD_H = 24
+
+
+@dataclass
+class Job:
+    jid: int
+    submit_h: float
+    duration_h: float
+    nodes: int
+    power_node_w: float       # mean IT power per node at full rate
+    elastic: bool = False
+    d_max_h: float = 24.0     # aging budget denominator
+    # runtime state
+    start_h: float = -1.0
+    done_h: float = -1.0
+    replicas: float = 1.0     # elastic scale factor (1.0 = as submitted)
+    remaining_h: float = field(default=-1.0)
+
+    def __post_init__(self):
+        if self.remaining_h < 0:
+            self.remaining_h = self.duration_h
+
+    @property
+    def short(self) -> bool:
+        return self.duration_h <= SHORT_JOB_H
+
+    def beta(self, now_h: float) -> float:
+        return max(now_h - self.submit_h, 0.0) / max(self.d_max_h, 1e-6)
+
+
+@dataclass
+class DispatchStats:
+    dispatched: int = 0
+    deferred: int = 0
+    backfilled: int = 0
+    capped_job_hours: float = 0.0
+    wait_hours: list = field(default_factory=list)
+    it_energy_mwh: float = 0.0
+    facility_energy_mwh: float = 0.0
+    co2_t: float = 0.0          # operational tCO2 (facility energy x CI)
+    co2_it_t: float = 0.0       # IT-side tCO2 (board energy x CI)
+    cfe_num: float = 0.0        # energy in green windows
+    util_trace: list = field(default_factory=list)
+    sigma_trace: list = field(default_factory=list)
+    pue_trace: list = field(default_factory=list)
+
+
+class GridPilotDispatcher:
+    """Hourly dispatch over a job trace against CI/T_amb series.
+
+    `pue_aware=False` gives the CI-only Tier-3 baseline of E8 (sigma = CI
+    normalised alone); `pue_aware=True` uses the composite CI x PUE signal.
+    """
+
+    def __init__(self, total_nodes: int, node_power_w: float,
+                 ci_series: np.ndarray, t_amb_series: np.ndarray,
+                 *, pue_aware: bool = True,
+                 pue_design: float = pue_lib.PUE_DESIGN,
+                 green_threshold_pct: float = 50.0):
+        self.total_nodes = total_nodes
+        self.node_power_w = node_power_w
+        self.design_it_w = total_nodes * node_power_w
+        self.ci = np.asarray(ci_series, np.float64)
+        self.t_amb = np.asarray(t_amb_series, np.float64)
+        self.pue_aware = pue_aware
+        self.pue_design = pue_design
+        self.green_ci = np.percentile(self.ci, green_threshold_pct)
+
+    # -- signal -------------------------------------------------------------
+    def sigma(self, h: int, load: float) -> float:
+        ci = self.ci[h]
+        if not self.pue_aware:
+            return float(ci)
+        p = float(pue_lib.pue(max(load, 0.05), self.t_amb[h],
+                              pue_design=self.pue_design))
+        return float(ci * p)
+
+    def sigma_threshold(self, h: int, load: float) -> float:
+        """66th percentile of sigma over the 24 h look-ahead window."""
+        hs = np.arange(h, min(h + LOOKAHEAD_H, len(self.ci)))
+        vals = [self.sigma(int(t), load) for t in hs]
+        return float(np.percentile(vals, SIGMA_PCT))
+
+    # -- one scheduling tick (1 h) -------------------------------------------
+    def _try_start(self, job: Job, free_nodes: int, now_h: float,
+                   running: list, stats: DispatchStats,
+                   sigma_hi: bool, sigma_ratio: float,
+                   elastic_rank: int, n_elastic: int) -> int:
+        need = job.nodes
+        if job.elastic and n_elastic > 0 and elastic_rank < max(
+                1, int(np.ceil(ELASTIC_FRACTION * n_elastic))):
+            # scale replicas inversely to sigma: shrink in dirty windows
+            scale = float(np.clip(1.0 / max(sigma_ratio, 0.25), 0.5, 2.0))
+            job.replicas = scale
+            need = max(1, int(round(job.nodes * scale)))
+            # work-conserving: total node-hours preserved
+            job.remaining_h = job.remaining_h * job.nodes / need
+        if need <= free_nodes:
+            job.start_h = now_h
+            job.nodes = need
+            running.append(job)
+            stats.dispatched += 1
+            stats.wait_hours.append(now_h - job.submit_h)
+            return need
+        return 0
+
+    def run(self, jobs: list[Job], horizon_h: Optional[int] = None,
+            reserve_rho: float = 0.0) -> DispatchStats:
+        """Replay the trace.  Returns aggregate stats.
+
+        reserve_rho caps usable nodes at (1 - rho) of the fleet -- the FFR
+        band withheld by Tier-3 (instantly sheddable duty-cycled capacity).
+        """
+        horizon = int(horizon_h if horizon_h is not None else len(self.ci))
+        horizon = min(horizon, len(self.ci))
+        pending: list[tuple] = []   # heap by (submit, jid)
+        arrivals = sorted(jobs, key=lambda j: j.submit_h)
+        ai = 0
+        running: list[Job] = []
+        stats = DispatchStats()
+        usable = int(round(self.total_nodes * (1.0 - reserve_rho)))
+        load_est = 0.7
+
+        for h in range(horizon):
+            now = float(h)
+            # job arrivals
+            while ai < len(arrivals) and arrivals[ai].submit_h <= now:
+                j = arrivals[ai]
+                heapq.heappush(pending, (j.submit_h, j.jid, j))
+                ai += 1
+            # completions
+            still = []
+            for j in running:
+                if j.remaining_h <= 1e-9:
+                    j.done_h = now
+                else:
+                    still.append(j)
+            running = still
+
+            busy = sum(j.nodes for j in running)
+            free = usable - busy
+            sig = self.sigma(h, load_est)
+            thr = self.sigma_threshold(h, load_est)
+            sigma_hi = sig > thr
+            sigma_ratio = sig / max(thr, 1e-9)
+            stats.sigma_trace.append(sig)
+
+            # Algorithm 1 main loop (priority = submit order)
+            defer_back: list[tuple] = []
+            n_elastic = sum(1 for _, _, j in pending if j.elastic)
+            elastic_rank = 0
+            while pending:
+                _, _, job = heapq.heappop(pending)
+                if sigma_hi and job.beta(now) < BETA_CUTOFF and not job.short:
+                    stats.deferred += 1
+                    defer_back.append((job.submit_h, job.jid, job))
+                    continue
+                got = self._try_start(job, free, now, running, stats,
+                                      sigma_hi, sigma_ratio,
+                                      elastic_rank, n_elastic)
+                if job.elastic:
+                    elastic_rank += 1
+                if got == 0:
+                    defer_back.append((job.submit_h, job.jid, job))
+                else:
+                    free -= got
+            # EASY backfill: short jobs squeeze into remaining nodes
+            rest = []
+            for item in sorted(defer_back, key=lambda it: it[2].duration_h):
+                job = item[2]
+                if job.short and 0 < job.nodes <= free:
+                    job.start_h = now
+                    running.append(job)
+                    free -= job.nodes
+                    stats.backfilled += 1
+                    stats.wait_hours.append(now - job.submit_h)
+                else:
+                    rest.append(item)
+            pending = rest
+            heapq.heapify(pending)
+
+            # power/carbon integration for this hour
+            cap_factor = HIGH_SIGMA_CAP if sigma_hi else 1.0
+            it_w = 0.0
+            for j in running:
+                w = j.nodes * self.node_power_w * cap_factor
+                it_w += w
+                # capped jobs progress at ~96 % rate (paper: capping running
+                # jobs delivers savings "without adding wait time")
+                rate = 0.96 if sigma_hi else 1.0
+                j.remaining_h -= rate
+                if sigma_hi:
+                    stats.capped_job_hours += j.nodes
+            it_w += (self.total_nodes - busy) * self.node_power_w * 0.08  # idle
+            load = it_w / self.design_it_w
+            load_est = 0.5 * load_est + 0.5 * load
+            p = float(pue_lib.pue(max(load, 0.05), self.t_amb[h],
+                                  pue_design=self.pue_design))
+            fac_w = it_w * p
+            stats.util_trace.append(load)
+            stats.pue_trace.append(p)
+            e_it = it_w / 1e6            # MWh for one hour
+            e_fac = fac_w / 1e6
+            stats.it_energy_mwh += e_it
+            stats.facility_energy_mwh += e_fac
+            stats.co2_t += e_fac * self.ci[h] / 1000.0
+            stats.co2_it_t += e_it * self.ci[h] / 1000.0
+            if self.ci[h] <= self.green_ci:
+                stats.cfe_num += e_fac
+        return stats
+
+    def cfe(self, stats: DispatchStats) -> float:
+        return stats.cfe_num / max(stats.facility_energy_mwh, 1e-9)

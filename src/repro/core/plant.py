@@ -1,0 +1,299 @@
+"""Accelerator power/thermal plant simulator (the V100 stand-in).
+
+The paper measures a real 3xV100 node; this container has no GPUs, so the
+plant reproduces the paper's own fitted physics and is driven either by the
+three workload archetypes (E1-E7) or by the *real* per-step FLOP/byte counts
+of a compiled JAX step (the TPU adaptation path, see DESIGN.md §2).
+
+Model (paper §5.1, E1):           P = P_idle + a*f + b*f^2*L + g*L
+with a voltage floor at F_VMIN: below it voltage cannot drop further so the
+quadratic term degrades to  b*f*F_VMIN*L  (this is what makes the paper's
+(150 W, 945 MHz) best-efficiency point emerge instead of "lower is better").
+
+Two response mechanisms (reconciles E2 vs E7, see EXPERIMENTS.md):
+  * demand-side changes (workload swings under the cap) follow a first-order
+    response with a per-workload time constant (6 / 7 / 9.7 ms) -> E2's
+    18/21/29 ms settling at the +/-2 % band (3*tau).
+  * cap-enforced reductions go through the firmware governor, slew-limited
+    at GOV_SLEW W/ms -> E7's ~90 ms settle on the 280->200 W FFR step.
+
+Thermal: first-order junction model, tau = 8 s (paper Tier-1).
+
+Everything is pure JAX so the cluster digital twin can vmap thousands of
+chips and run >> real time (the paper's simulator does 26 000x).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Constants (V100 SXM2 calibration; E1 re-fits them from the synthetic sweep)
+# ---------------------------------------------------------------------------
+
+P_IDLE = 39.0          # W (paper E1)
+ALPHA = 0.027          # W / MHz          (clock tree, load-independent)
+BETA = 9.27e-5         # W / MHz^2        (switching, load-dependent)
+GAMMA = 2.7            # W                (load-dependent static)
+TDP = 300.0            # W (V100 SXM2)
+CAP_MIN, CAP_MAX = 100.0, 300.0
+F_MAX = 1530.0         # MHz max boost
+F_MIN = 405.0          # MHz min SM clock
+F_VMIN = 945.0         # MHz voltage floor (below: no quadratic power savings)
+F_NOMINAL = 1480.0     # MHz boost clock under load (matmul ~280 W at L=0.97)
+
+# firmware cap-governor slew for large out-of-band activations, as a
+# FRACTION of current power per ms (multiplicative/exponential approach).
+# ln(280/204)/0.00344 ~ 92 ms: reproduces E7's ~97 ms end-to-end medians
+# near-identically across workloads (proportional sheds take equal time).
+GOV_SLEW = 0.00344     # 1/ms
+ACTUATE_DELAY_MS = 5.0  # NVML cap-update latency analogue [29]
+
+TAU_THERMAL = 8.0      # s   first-order junction time constant
+T_AMBIENT_INT = 30.0   # degC internal inlet
+R_TH = 50.0 / 300.0    # degC/W junction rise per watt
+T_FALLBACK = 85.0      # degC Tier-1 thermal fallback threshold
+CAP_FALLBACK = 200.0   # W fallback cap
+
+TELEMETRY_HZ = 100.0   # NVML sampling analogue
+CONTROL_HZ = 200.0     # Tier-1 tick
+
+
+def power_model(f_mhz, load, *, p_idle=P_IDLE, a=ALPHA, b=BETA, g=GAMMA):
+    """Steady-state board power at SM clock `f_mhz` and utilisation `load`.
+
+    Voltage floor: below F_VMIN the V^2 term stops scaling with f^2.
+    """
+    f = jnp.asarray(f_mhz, jnp.float32)
+    L = jnp.asarray(load, jnp.float32)
+    f2 = jnp.where(f >= F_VMIN, f * f, f * F_VMIN)
+    return p_idle + a * f + b * f2 * L + g * L
+
+
+def freq_at_cap(cap, load, *, a=ALPHA, b=BETA, g=GAMMA, p_idle=P_IDLE):
+    """SM clock the governor settles at so that P(f, L) == cap (inverse model).
+
+    Branch-aware in the voltage floor; clipped to [F_MIN, F_MAX].
+    """
+    cap = jnp.asarray(cap, jnp.float32)
+    L = jnp.maximum(jnp.asarray(load, jnp.float32), 1e-3)
+    budget = cap - p_idle - g * L
+    # quadratic branch: b*L*f^2 + a*f - budget = 0
+    disc = a * a + 4.0 * b * L * jnp.maximum(budget, 0.0)
+    f_quad = (-a + jnp.sqrt(disc)) / (2.0 * b * L)
+    # linear branch (f < F_VMIN): (a + b*F_VMIN*L) * f = budget
+    f_lin = budget / (a + b * F_VMIN * L)
+    f = jnp.where(f_quad >= F_VMIN, f_quad, f_lin)
+    return jnp.clip(f, F_MIN, F_MAX)
+
+
+# ---------------------------------------------------------------------------
+# Workload archetypes (paper §4): load profiles L(t) in [0, 1]
+# ---------------------------------------------------------------------------
+
+WORKLOADS = ("matmul", "inference", "bursty")
+
+# (mean load, fast-noise sigma, slow-noise sigma, demand tau ms).
+# tau is chosen so settle(+/-2% band) = 5 ms NVML window + 3*tau, matching
+# the paper's E2 medians 18/21/29 ms; fast sigma reproduces the E3 AR(4)
+# MAE levels (matmul's "GEMM tile-schedule variance" is white at 1 Hz).
+_ARCHETYPES = {
+    "matmul": dict(mean=0.97, fast_sigma=0.021, slow_sigma=0.012,
+                   tau_ms=4.33),
+    # memory-bound, mean < 200 W, near-stationary (tightest AR(4) MAE)
+    "inference": dict(mean=0.58, fast_sigma=0.008, slow_sigma=0.010,
+                      tau_ms=5.33),
+    # period-4s compute/idle square wave, 50 % duty
+    "bursty": dict(mean=0.95, fast_sigma=0.008, slow_sigma=0.02, tau_ms=8.0),
+}
+BURSTY_PERIOD_S = 4.0
+BURSTY_DUTY = 0.5
+BURSTY_LOW = 0.05
+BURSTY_EDGE_JITTER_S = 0.12
+
+
+def workload_tau_ms(workload: str) -> float:
+    return _ARCHETYPES[workload]["tau_ms"]
+
+
+def workload_load(workload: str, t_s, key, phase=0.0):
+    """Instantaneous utilisation L(t).  t_s may be an array; key is a PRNG key.
+
+    Slow noise is a deterministic band-limited pseudo-random walk (sum of
+    incommensurate sinusoids seeded from `key`) so that the trace is
+    reproducible and differentiable; fast noise is white.
+    """
+    a = _ARCHETYPES[workload]
+    t = jnp.asarray(t_s, jnp.float32)
+    k1, k2, k3 = jax.random.split(key, 3)
+    ph = jax.random.uniform(k1, (4,), minval=0.0, maxval=2 * jnp.pi)
+    freqs = jnp.asarray([0.031, 0.073, 0.127, 0.211])  # Hz, ~10-30 s waves
+    slow = jnp.sum(
+        jnp.sin(2 * jnp.pi * freqs * t[..., None] + ph), axis=-1
+    ) / 2.0
+    fast = jax.random.normal(k2, t.shape)
+    base = a["mean"] + a["slow_sigma"] * slow + a["fast_sigma"] * fast
+    if workload == "bursty":
+        jit_t = BURSTY_EDGE_JITTER_S * jnp.sin(
+            2 * jnp.pi * 0.017 * t + jax.random.uniform(k3, (), maxval=6.28)
+        )
+        frac = jnp.mod((t + jit_t) / BURSTY_PERIOD_S + phase, 1.0)
+        on = frac < BURSTY_DUTY
+        base = jnp.where(on, base, BURSTY_LOW + 0.01 * fast)
+    return jnp.clip(base, 0.0, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Plant state + dynamics
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class PlantState:
+    """Per-chip plant state; all fields shaped (n_chips,)."""
+
+    power: jax.Array      # board power, W
+    cap: jax.Array        # enforced power cap, W
+    pending_cap: jax.Array    # cap written but still in the NVML latency window
+    pending_ms: jax.Array     # time until pending cap becomes active (ms)
+    temp: jax.Array       # junction temperature, degC
+    freq: jax.Array       # governor SM clock, MHz
+
+
+def init_plant(n_chips: int, cap: float = CAP_MAX) -> PlantState:
+    z = jnp.zeros((n_chips,), jnp.float32)
+    return PlantState(
+        power=z + P_IDLE,
+        cap=z + cap,
+        pending_cap=z + cap,
+        pending_ms=z,
+        temp=z + T_AMBIENT_INT,
+        freq=z + F_NOMINAL,
+    )
+
+
+def write_cap(state: PlantState, cap) -> PlantState:
+    """Queue a cap write (takes ACTUATE_DELAY_MS to reach the firmware)."""
+    cap = jnp.clip(jnp.broadcast_to(cap, state.cap.shape), CAP_MIN, CAP_MAX)
+    return dataclasses.replace(
+        state,
+        pending_cap=cap.astype(jnp.float32),
+        pending_ms=jnp.full_like(state.pending_ms, ACTUATE_DELAY_MS),
+    )
+
+
+@partial(jax.jit, static_argnames=("tau_ms", "slew_w_ms"))
+def plant_step(state: PlantState, load, dt_ms, *, tau_ms: float = 6.0,
+               slew_w_ms: Optional[float] = None,
+               noise_key: Optional[jax.Array] = None) -> PlantState:
+    """Advance the plant by dt_ms under utilisation `load` (per chip).
+
+    demand-side moves: first-order with tau_ms.
+    cap-bound downward moves with slew_w_ms set: governor slew (W/ms).
+
+    Two-regime governor (see EXPERIMENTS.md "E2 vs E7 reconciliation"):
+    the paper's inner-loop step response (E2: 18/21/29 ms = 3*tau at the
+    +/-2 % band) implies a first-order plant, while its E7 budget
+    (L_settle ~ 90 ms on the 80 W FFR step) implies slew-limited firmware
+    enforcement of large out-of-band cap drops.  One LTI plant cannot
+    produce both published numbers; we model the large-activation path
+    with slew_w_ms=GOV_SLEW and the inner-loop path without.
+    """
+    dt = jnp.asarray(dt_ms, jnp.float32)
+    # NVML latency window
+    pend = jnp.maximum(state.pending_ms - dt, 0.0)
+    cap = jnp.where(pend <= 0.0, state.pending_cap, state.cap)
+
+    demand = power_model(F_NOMINAL, load)
+    target = jnp.minimum(demand, cap)
+    blend = 1.0 - jnp.exp(-dt / tau_ms)
+    move = (target - state.power) * blend
+    if slew_w_ms is not None:
+        # governor: cap-enforced drops cannot exceed the (multiplicative)
+        # slew -- a fraction of current power per ms
+        cap_bound = (state.power > cap) & (target < state.power)
+        max_drop = slew_w_ms * state.power * dt
+        move = jnp.where(cap_bound, jnp.maximum(move, -max_drop), move)
+    power = state.power + move
+    if noise_key is not None:
+        power = power + 0.35 * jax.random.normal(noise_key, power.shape)
+    power = jnp.clip(power, P_IDLE * 0.9, TDP * 1.02)
+
+    # thermal first-order
+    t_inf = T_AMBIENT_INT + R_TH * power
+    temp = state.temp + (t_inf - state.temp) * (
+        1.0 - jnp.exp(-(dt / 1000.0) / TAU_THERMAL)
+    )
+    freq = freq_at_cap(cap, jnp.maximum(load, 1e-3))
+    return PlantState(
+        power=power, cap=cap, pending_cap=state.pending_cap,
+        pending_ms=pend, temp=temp, freq=freq,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Throughput model (E1 iterations-per-joule)
+# ---------------------------------------------------------------------------
+
+# r(f): iterations/s. matmul ~ linear in clock; inference mostly HBM-bound;
+# bursty = duty-cycled matmul. r0 calibrated to the paper's best-point values
+# (2.880 / 0.570 / 0.549 it/J at (150 W, 945 MHz)).
+_R0 = {"matmul": 0.0905, "inference": 416.0, "bursty": 0.1186}
+
+
+def throughput(workload: str, f_mhz) -> jax.Array:
+    f = jnp.asarray(f_mhz, jnp.float32)
+    if workload == "inference":
+        return _R0["inference"] * (0.45 + 0.55 * f / F_NOMINAL)
+    r = _R0[workload] * f
+    if workload == "bursty":
+        r = r * BURSTY_DUTY * 2.0 * 0.5  # duty-cycled; idle cost in denominator
+    return r
+
+
+def iterations_per_joule(workload: str, cap, f_request) -> jax.Array:
+    """Steady-state it/J at a (cap, requested clock) cell of the E1 sweep.
+
+    bursty evaluates its ON phase at full load (the duty cycle is in time,
+    not utilisation) and averages idle power into the denominator.
+    """
+    load = {"matmul": 1.0, "inference": 0.60, "bursty": 1.0}[workload]
+    f_req = jnp.asarray(f_request, jnp.float32)
+    p_unc = power_model(f_req, load)
+    f_eff = jnp.where(p_unc > cap, freq_at_cap(cap, load), f_req)
+    p_eff = jnp.minimum(power_model(f_eff, load), cap)
+    if workload == "bursty":
+        r = _R0["bursty"] * f_eff * BURSTY_DUTY
+        p_avg = BURSTY_DUTY * p_eff + (1 - BURSTY_DUTY) * (P_IDLE + 15.0)
+        return r / p_avg
+    return throughput(workload, f_eff) / p_eff
+
+
+# ---------------------------------------------------------------------------
+# TPU adaptation: drive the plant from a compiled step's cost analysis
+# ---------------------------------------------------------------------------
+
+TPU_PEAK_FLOPS = 197e12     # bf16/chip, v5e-class (system prompt constants)
+TPU_HBM_BW = 819e9          # B/s
+TPU_TDP = 250.0             # W per-chip envelope used by the twin
+TPU_IDLE = 55.0
+
+
+def load_from_cost_analysis(flops_per_step: float, bytes_per_step: float,
+                            step_time_s: float) -> float:
+    """Map a compiled step's roofline occupancy onto plant utilisation.
+
+    L = max(compute occupancy, memory occupancy) -- the busier unit pins
+    board power, which is what the facility meter sees.
+    """
+    if step_time_s <= 0:
+        return 1.0
+    occ_c = flops_per_step / (TPU_PEAK_FLOPS * step_time_s)
+    occ_m = bytes_per_step / (TPU_HBM_BW * step_time_s)
+    return float(np.clip(max(occ_c, occ_m), 0.0, 1.0))

@@ -1,0 +1,4 @@
+from repro.data.tokens import TokenPipeline, synthetic_batch
+from repro.data.m100 import synthesize_m100_trace
+
+__all__ = ["TokenPipeline", "synthetic_batch", "synthesize_m100_trace"]

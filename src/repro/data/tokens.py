@@ -1,0 +1,87 @@
+"""Synthetic LM data pipeline.
+
+Deterministic, seekable token stream (restart-safe: the checkpoint stores
+only the step counter), Zipf-distributed over the vocab with short-range
+repetition structure so the LM loss actually decreases.  Shards the
+global batch by host and prefetches ahead of the step.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from dataclasses import dataclass
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def synthetic_batch(key, batch: int, seq: int, vocab: int,
+                    frontend_tokens: int = 0, d_model: int = 0,
+                    encoder_seq: int = 0, dtype=jnp.float32) -> dict:
+    """One abstract-shape-compatible batch of synthetic data (jit-able)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    # zipf-ish: exponential transform of uniforms
+    u = jax.random.uniform(k1, (batch, seq), minval=1e-6, maxval=1.0)
+    tokens = jnp.clip(
+        (jnp.exp(-jnp.log(u) * 0.35) - 1.0) * 7.0, 0, vocab - 1
+    ).astype(jnp.int32)
+    # short-range structure: repeat the previous token 25 % of the time
+    rep = jax.random.bernoulli(k2, 0.25, (batch, seq))
+    tokens = jnp.where(rep, jnp.roll(tokens, 1, axis=1), tokens)
+    out = {"tokens": tokens}
+    if frontend_tokens and d_model:
+        out["embeds"] = 0.02 * jax.random.normal(
+            k3, (batch, frontend_tokens, d_model), dtype)
+    if encoder_seq and d_model:
+        out["frames"] = 0.02 * jax.random.normal(
+            k3, (batch, encoder_seq, d_model), dtype)
+    return out
+
+
+@dataclass
+class TokenPipeline:
+    """Seekable, prefetching synthetic-token source.
+
+    `seed` + `step` fully determine a batch -> elastic restore needs no
+    data-state checkpoint beyond the step counter.
+    """
+
+    batch: int
+    seq: int
+    vocab: int
+    seed: int = 0
+    frontend_tokens: int = 0
+    d_model: int = 0
+    encoder_seq: int = 0
+    prefetch: int = 2
+
+    def batch_at(self, step: int) -> dict:
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
+        return synthetic_batch(
+            key, self.batch, self.seq, self.vocab,
+            frontend_tokens=self.frontend_tokens, d_model=self.d_model,
+            encoder_seq=self.encoder_seq,
+        )
+
+    def iterate(self, start_step: int = 0) -> Iterator[dict]:
+        """Background-prefetched iterator from `start_step`."""
+        q: "queue.Queue" = queue.Queue(maxsize=self.prefetch)
+        stop = threading.Event()
+
+        def worker():
+            s = start_step
+            while not stop.is_set():
+                b = jax.tree.map(np.asarray, self.batch_at(s))
+                q.put((s, b))
+                s += 1
+
+        t = threading.Thread(target=worker, daemon=True)
+        t.start()
+        try:
+            while True:
+                _, b = q.get()
+                yield {k: jnp.asarray(v) for k, v in b.items()}
+        finally:
+            stop.set()

@@ -1,0 +1,18 @@
+from repro.grid.signals import (
+    COUNTRIES,
+    GridSignals,
+    synthesize_ci,
+    synthesize_t_amb,
+    make_grid,
+)
+from repro.grid.markets import FR_PRODUCTS, FFRTriggerGen
+
+__all__ = [
+    "COUNTRIES",
+    "GridSignals",
+    "synthesize_ci",
+    "synthesize_t_amb",
+    "make_grid",
+    "FR_PRODUCTS",
+    "FFRTriggerGen",
+]

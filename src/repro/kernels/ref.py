@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+These are deliberately naive O(S^2)/materialised implementations -- the
+tests sweep shapes/dtypes and assert the kernels match them.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: (B,Sq,H,D); k/v: (B,Sk,Hkv,D).  Dense masked softmax attention."""
+    b, sq, h, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    rep = h // hkv
+    kk = jnp.repeat(k, rep, axis=2)
+    vv = jnp.repeat(v, rep, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) / np.sqrt(d)
+    q_pos = jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window > 0:
+        mask &= q_pos - k_pos < window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p,
+                      vv.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_ref(x, dt, A, B, C):
+    """Sequential (non-chunked) SSD recurrence -- the exact oracle.
+
+    x: (b,s,nh,hd); dt: (b,s,nh); A: (nh,); B/C: (b,s,ds).
+    h_t = h_{t-1} * exp(dt_t A) + dt_t B_t x_t;  y_t = C_t . h_t
+    """
+    b, s, nh, hd = x.shape
+    ds = B.shape[-1]
+    f32 = jnp.float32
+
+    def step(h, inp):
+        xt, dtt, Bt, Ct = inp
+        decay = jnp.exp(dtt * A)                       # (b, nh)
+        dBx = jnp.einsum("bn,bh,bhp->bhpn", Bt, dtt, xt)
+        h = h * decay[..., None, None] + dBx
+        y = jnp.einsum("bn,bhpn->bhp", Ct, h)
+        return h, y
+
+    h0 = jnp.zeros((b, nh, hd, ds), f32)
+    xs = (
+        x.astype(f32).transpose(1, 0, 2, 3),
+        dt.astype(f32).transpose(1, 0, 2),
+        B.astype(f32).transpose(1, 0, 2),
+        C.astype(f32).transpose(1, 0, 2),
+    )
+    _, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype)
+
+
+def pid_ref(target, power, temp, integ, prev_err, dt_s: float = 0.005):
+    """Mirror of repro.core.pid.pid_step (vector form)."""
+    from repro.core import pid as pid_lib
+
+    st = pid_lib.PIDState(integ=integ, prev_err=prev_err,
+                          u=jnp.zeros_like(integ))
+    new, u = pid_lib.pid_step(st, target, power, temp, dt_s)
+    return new.integ, new.prev_err, u

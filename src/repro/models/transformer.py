@@ -1,0 +1,553 @@
+"""Decoder-only LM covering the dense / moe / ssm / hybrid / vlm families.
+
+Parameters are stacked over layers and the forward pass scans them
+(`jax.lax.scan`), so HLO size and compile time are O(1) in depth; the
+dry-run can optionally unroll (`unroll=True`) for exact per-op cost
+accounting.  Activation checkpointing policy comes from the sharding plan.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import moe as moe_lib
+from repro.models import ssd as ssd_lib
+from repro.models.layers import (
+    ParamSpec,
+    apply_rope,
+    blocked_attention,
+    decode_attention,
+    gated_mlp,
+    rmsnorm,
+    shard,
+)
+
+AUX_LOSS_WEIGHT = 0.01
+Z_LOSS_WEIGHT = 1e-4
+
+
+# ---------------------------------------------------------------------------
+# Param specs
+# ---------------------------------------------------------------------------
+
+
+def attn_specs(cfg: ArchConfig, lead: tuple, dtype) -> dict:
+    d = cfg.d_model
+    h = cfg.resolved_head_dim
+    qf, kf = cfg.n_heads * h, cfg.n_kv_heads * h
+    lax_ = tuple("layers" for _ in lead)
+    sp = {
+        "wq": ParamSpec(lead + (d, qf), lax_ + ("embed", "q_feat"), dtype),
+        "wk": ParamSpec(lead + (d, kf), lax_ + ("embed", "kv_feat"), dtype),
+        "wv": ParamSpec(lead + (d, kf), lax_ + ("embed", "kv_feat"), dtype),
+        "wo": ParamSpec(lead + (qf, d), lax_ + ("q_feat", "embed"), dtype),
+    }
+    if cfg.qkv_bias:
+        sp["bq"] = ParamSpec(lead + (qf,), lax_ + ("q_feat",), dtype, "zeros")
+        sp["bk"] = ParamSpec(lead + (kf,), lax_ + ("kv_feat",), dtype, "zeros")
+        sp["bv"] = ParamSpec(lead + (kf,), lax_ + ("kv_feat",), dtype, "zeros")
+    return sp
+
+
+def dense_ffn_specs(cfg: ArchConfig, lead: tuple, dtype) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    lax_ = tuple("layers" for _ in lead)
+    return {
+        "wi": ParamSpec(lead + (d, f), lax_ + ("embed", "mlp"), dtype),
+        "wg": ParamSpec(lead + (d, f), lax_ + ("embed", "mlp"), dtype),
+        "wo_mlp": ParamSpec(lead + (f, d), lax_ + ("mlp", "embed"), dtype),
+    }
+
+
+def lm_specs(cfg: ArchConfig, dtype=jnp.float32) -> dict:
+    d = cfg.d_model
+    v = cfg.padded_vocab
+    specs: dict = {
+        "embed": ParamSpec((v, d), ("vocab", "embed"), dtype),
+        "final_norm": ParamSpec((d,), (None,), dtype, "ones"),
+    }
+    if not cfg.tie_embeddings:
+        specs["unembed"] = ParamSpec((d, v), ("embed", "vocab"), dtype)
+    if cfg.frontend != "none":
+        # stub adapter: precomputed patch/frame embeddings -> model space
+        specs["frontend_proj"] = ParamSpec((d, d), ("embed", None), dtype)
+
+    L = (cfg.num_layers,)
+    if cfg.family == "ssm":
+        specs["layers"] = {
+            "ln1": ParamSpec(L + (d,), ("layers", None), dtype, "ones"),
+            **ssd_lib.ssd_specs(cfg, cfg.num_layers, dtype),
+        }
+        return specs
+    if cfg.family == "hybrid":
+        n_chunks = cfg.num_layers // cfg.hybrid_period
+        lead = (n_chunks, cfg.hybrid_period)
+        specs["layers"] = {
+            "ln1": ParamSpec(lead + (d,), ("layers", "layers", None), dtype, "ones"),
+            **{
+                k: ParamSpec(lead + s.shape[1:], ("layers",) + s.axes, s.dtype, s.init)
+                for k, s in ssd_lib.ssd_specs(cfg, cfg.hybrid_period, dtype).items()
+            },
+        }
+        # single shared attention+MLP block
+        specs["shared"] = {
+            "ln1": ParamSpec((d,), (None,), dtype, "ones"),
+            "ln2": ParamSpec((d,), (None,), dtype, "ones"),
+            **attn_specs(cfg, (), dtype),
+            **dense_ffn_specs(cfg, (), dtype),
+        }
+        return specs
+
+    layer: dict = {
+        "ln1": ParamSpec(L + (d,), ("layers", None), dtype, "ones"),
+        "ln2": ParamSpec(L + (d,), ("layers", None), dtype, "ones"),
+        **attn_specs(cfg, L, dtype),
+    }
+    if cfg.is_moe:
+        layer.update(moe_lib.moe_specs(cfg, cfg.num_layers, dtype))
+    else:
+        layer.update(dense_ffn_specs(cfg, L, dtype))
+    specs["layers"] = layer
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def _qkv(cfg, lp, x):
+    h = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,df->bsf", x, lp["wq"])
+    k = jnp.einsum("bsd,df->bsf", x, lp["wk"])
+    v = jnp.einsum("bsd,df->bsf", x, lp["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + lp["bq"], k + lp["bk"], v + lp["bv"]
+    b, s = x.shape[:2]
+    q = q.reshape(b, s, cfg.n_heads, h)
+    k = k.reshape(b, s, cfg.n_kv_heads, h)
+    v = v.reshape(b, s, cfg.n_kv_heads, h)
+    return q, k, v
+
+
+def attn_block(cfg, lp, x, positions, *, window: int):
+    """Full-sequence causal attention (train / prefill). Returns (out, k, v)."""
+    q, k, v = _qkv(cfg, lp, x)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = shard(q, "batch", None, "heads", None)
+    out = blocked_attention(q, k, v, causal=True, window=window)
+    b, s = x.shape[:2]
+    out = out.reshape(b, s, cfg.n_heads * cfg.resolved_head_dim)
+    return jnp.einsum("bsf,fd->bsd", out, lp["wo"]), k, v
+
+
+def mlp_block(cfg, lp, x):
+    if cfg.is_moe:
+        return moe_lib.moe_ffn(cfg, lp, x)
+    return gated_mlp(x, lp["wi"], lp["wg"], lp["wo_mlp"]), jnp.float32(0.0)
+
+
+def _dense_layer(cfg, lp, x, positions):
+    a, _, _ = attn_block(cfg, lp, x, positions, window=cfg.sliding_window)
+    x = x + a
+    m, aux = mlp_block(cfg, {**lp}, rmsnorm(x, lp["ln2"], cfg.norm_eps))
+    return x + m, aux
+
+
+def _make_layer_fn(cfg):
+    def layer(x, lp, positions):
+        # mixed precision: params stored f32, computed in x.dtype (bf16)
+        lp = jax.tree.map(lambda p: p.astype(x.dtype), lp)
+        h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        if cfg.family in ("ssm", "hybrid"):  # hybrid inner layers are Mamba2
+            return x + ssd_lib.ssd_block(cfg, lp, h, cfg.norm_eps), jnp.float32(0.0)
+        a, _, _ = attn_block(cfg, lp, h, positions, window=cfg.sliding_window)
+        x = x + a
+        m, aux = mlp_block(cfg, lp, rmsnorm(x, lp["ln2"], cfg.norm_eps))
+        return x + m, aux
+
+    return layer
+
+
+def _remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    return jax.checkpoint(fn)  # "full": save nothing
+
+
+def shared_block(cfg, sp, x, positions, window):
+    sp = jax.tree.map(lambda p: p.astype(x.dtype), sp)
+    h = rmsnorm(x, sp["ln1"], cfg.norm_eps)
+    a, _, _ = attn_block(cfg, sp, h, positions, window=window)
+    x = x + a
+    m = gated_mlp(rmsnorm(x, sp["ln2"], cfg.norm_eps), sp["wi"], sp["wg"], sp["wo_mlp"])
+    return x + m
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill trunk)
+# ---------------------------------------------------------------------------
+
+
+def embed_tokens(cfg, params, tokens, extra_embeds, dtype):
+    x = jnp.take(params["embed"].astype(dtype), tokens, axis=0)
+    if cfg.frontend != "none":
+        fe = jnp.einsum(
+            "bsd,de->bse", extra_embeds.astype(dtype), params["frontend_proj"].astype(dtype)
+        )
+        x = jnp.concatenate([fe, x], axis=1)
+    return x
+
+
+def lm_trunk(cfg: ArchConfig, params, x, positions, *, unroll: bool = False):
+    """Embeddings -> final norm. x: (B,S,D). Returns (x, aux_loss)."""
+    layer_fn = _remat(_make_layer_fn(cfg), cfg.plan.remat)
+    aux_total = jnp.float32(0.0)
+
+    if cfg.family == "hybrid":
+        n_chunks = cfg.num_layers // cfg.hybrid_period
+
+        def chunk_body(carry, chunk_params):
+            x, aux = carry
+            x = shared_block(
+                cfg, params["shared"], x, positions, cfg.sliding_window
+            )
+
+            def inner(c, lp):
+                y, a = layer_fn(c[0], lp, positions)
+                return (y, c[1] + a), None
+
+            if unroll:  # full unroll (cost-exact dry-run accounting)
+                c = (x, aux)
+                for j in range(cfg.hybrid_period):
+                    lp_j = jax.tree.map(lambda p: p[j], chunk_params)
+                    c, _ = inner(c, lp_j)
+                x, aux = c
+            else:
+                (x, aux), _ = jax.lax.scan(inner, (x, aux), chunk_params)
+            return (x, aux), None
+
+        if unroll:
+            carry = (x, aux_total)
+            for i in range(n_chunks):
+                lp_i = jax.tree.map(lambda p: p[i], params["layers"])
+                carry, _ = chunk_body(carry, lp_i)
+            x, aux_total = carry
+        else:
+            (x, aux_total), _ = jax.lax.scan(
+                chunk_body, (x, aux_total), params["layers"]
+            )
+    else:
+        def body(carry, lp):
+            y, a = layer_fn(carry[0], lp, positions)
+            return (y, carry[1] + a), None
+
+        if unroll:
+            carry = (x, aux_total)
+            for i in range(cfg.num_layers):
+                lp_i = jax.tree.map(lambda p: p[i], params["layers"])
+                carry, _ = body(carry, lp_i)
+            x, aux_total = carry
+        else:
+            (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), params["layers"])
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux_total
+
+
+def lm_logits(cfg, params, x):
+    dtype = x.dtype
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(dtype))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"].astype(dtype))
+    logits = shard(logits, "batch", None, "vocab")
+    if cfg.padded_vocab != cfg.vocab_size:
+        pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+        logits = jnp.where(pad_mask[None, None, :], -1e30, logits)
+    return logits
+
+
+def lm_forward(cfg, params, tokens, extra_embeds=None, *, dtype=jnp.bfloat16,
+               unroll=False, last_only=False):
+    x = embed_tokens(cfg, params, tokens, extra_embeds, dtype)
+    x = shard(x, "batch", None, None)
+    b, s = x.shape[:2]
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :].repeat(b, 0)
+    x, aux = lm_trunk(cfg, params, x, positions, unroll=unroll)
+    if last_only:
+        # serving prefill wants only the next-token distribution: slice
+        # BEFORE the unembed so the (B, S, V) logits never materialise.
+        x = x[:, -1:, :]
+    return lm_logits(cfg, params, x), aux
+
+
+def lm_loss(cfg, params, batch, *, dtype=jnp.bfloat16, unroll=False):
+    """Next-token CE (+ z-loss + MoE aux). batch: tokens (B,S) [+ embeds]."""
+    tokens = batch["tokens"]
+    extra = batch.get("embeds")
+    logits, aux = lm_forward(
+        cfg, params, tokens, extra, dtype=dtype, unroll=unroll
+    )
+    n_front = cfg.frontend_tokens if cfg.frontend != "none" else 0
+    logits = logits[:, n_front:, :]
+    # shift: predict tokens[:, 1:]
+    logits = logits[:, :-1].astype(jnp.float32)
+    targets = tokens[:, 1:]
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    ce = jnp.mean(logz - tgt)
+    zloss = jnp.mean(logz**2)
+    loss = ce + Z_LOSS_WEIGHT * zloss + AUX_LOSS_WEIGHT * aux
+    return loss, {"ce": ce, "zloss": zloss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def scan_layers(body, carry, xs_tree, unroll: bool):
+    """jax.lax.scan over layer-stacked pytrees, or a cost-exact Python
+    unroll (dry-run accounting; see benchmarks/roofline.py)."""
+    if not unroll:
+        return jax.lax.scan(body, carry, xs_tree)
+    n = jax.tree.leaves(xs_tree)[0].shape[0]
+    ys = []
+    for i in range(n):
+        carry, y = body(carry, jax.tree.map(lambda p: p[i], xs_tree))
+        ys.append(y)
+    if ys and ys[0] is not None:
+        stacked = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        stacked = None
+    return carry, stacked
+
+
+def cache_len_for(cfg: ArchConfig, seq_len: int) -> int:
+    if cfg.sliding_window and seq_len > cfg.sliding_window:
+        return cfg.sliding_window  # ring buffer
+    return seq_len
+
+
+def init_cache_specs(cfg: ArchConfig, batch: int, seq_len: int, dtype):
+    """Abstract KV/SSM cache for decoding at total context `seq_len`."""
+    h = cfg.resolved_head_dim
+    sc = cache_len_for(cfg, seq_len)
+    specs = {"cur": jax.ShapeDtypeStruct((), jnp.int32)}
+    if cfg.family == "ssm":
+        specs.update(
+            ssd_lib.ssd_decode_state_specs(cfg, cfg.num_layers, batch, dtype)
+        )
+        return specs
+    if cfg.family == "hybrid":
+        n_chunks = cfg.num_layers // cfg.hybrid_period
+        st = ssd_lib.ssd_decode_state_specs(cfg, cfg.num_layers, batch, dtype)
+        specs.update(st)
+        specs["k"] = jax.ShapeDtypeStruct(
+            (n_chunks, batch, sc, cfg.n_kv_heads, h), dtype
+        )
+        specs["v"] = jax.ShapeDtypeStruct(
+            (n_chunks, batch, sc, cfg.n_kv_heads, h), dtype
+        )
+        specs["pos_buf"] = jax.ShapeDtypeStruct((sc,), jnp.int32)
+        return specs
+    specs["k"] = jax.ShapeDtypeStruct(
+        (cfg.num_layers, batch, sc, cfg.n_kv_heads, h), dtype
+    )
+    specs["v"] = jax.ShapeDtypeStruct(
+        (cfg.num_layers, batch, sc, cfg.n_kv_heads, h), dtype
+    )
+    specs["pos_buf"] = jax.ShapeDtypeStruct((sc,), jnp.int32)
+    return specs
+
+
+def init_cache(cfg, batch, seq_len, dtype):
+    cache = jax.tree.map(
+        lambda s: jnp.full(s.shape, -1, s.dtype)
+        if s.dtype == jnp.int32
+        else jnp.zeros(s.shape, s.dtype),
+        init_cache_specs(cfg, batch, seq_len, dtype),
+    )
+    cache["cur"] = jnp.int32(0)  # pos_buf keeps -1 = empty sentinel
+    return cache
+
+
+def _decode_attn(cfg, lp, x, k_cache, v_cache, pos_buf, cur, dtype):
+    """x: (B,D). Returns (attn_out (B,D), new k/v cache slices)."""
+    h = cfg.resolved_head_dim
+    b = x.shape[0]
+    q = jnp.einsum("bd,df->bf", x, lp["wq"])
+    k = jnp.einsum("bd,df->bf", x, lp["wk"])
+    v = jnp.einsum("bd,df->bf", x, lp["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + lp["bq"], k + lp["bk"], v + lp["bv"]
+    q = q.reshape(b, 1, cfg.n_heads, h)
+    k = k.reshape(b, 1, cfg.n_kv_heads, h)
+    v = v.reshape(b, 1, cfg.n_kv_heads, h)
+    pos = cur[None, None].astype(jnp.int32).repeat(b, 0)  # (B,1)
+    q = apply_rope(q, pos, cfg.rope_theta)[:, 0]
+    k = apply_rope(k, pos, cfg.rope_theta)[:, 0]
+    v = v[:, 0]
+
+    sc = k_cache.shape[1]
+    idx = jnp.mod(cur, sc)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k[:, None], idx, 1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v[:, None], idx, 1)
+    if cfg.plan.decode_seq_constraint:
+        # keep the cache sequence-sharded through the update + attention
+        # (XLA otherwise all-gathers the whole KV per layer)
+        k_cache = shard(k_cache, "data", "model", None, None)
+        v_cache = shard(v_cache, "data", "model", None, None)
+
+    window = cfg.sliding_window
+    ages = cur - pos_buf  # pos_buf already updated by caller for this step
+    valid = (pos_buf >= 0) & (ages >= 0)
+    if window:
+        valid &= ages < window
+    scores_mask = valid[None, :]  # (1, Sc)
+
+    rep = cfg.n_heads // cfg.n_kv_heads
+    scale = 1.0 / np.sqrt(h)
+    if cfg.plan.decode_seq_constraint:
+        # grouped-GQA attention with NO kv repeat: the repeat materialises
+        # a rep-x copy of the cache that XLA head-shards, forcing an
+        # involuntary seq->head reshard of the multi-GiB cache EVERY layer.
+        # Contracting against the grouped (B, S, Hkv, D) cache directly
+        # keeps it sequence-sharded; softmax runs on seq-sharded scores and
+        # the PV product psums a small (B, H, D) partial instead.
+        qg = q.reshape(b, cfg.n_kv_heads, rep, h)
+        scores = jnp.einsum("bgrd,bkgd->bgrk", qg, k_cache,
+                            preferred_element_type=jnp.float32) * scale
+        scores = shard(scores, "data", None, None, "model")
+        scores = jnp.where(scores_mask[:, None, None, :], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(dtype)
+        out = jnp.einsum("bgrk,bkgd->bgrd", probs, v_cache)
+        out = out.reshape(b, cfg.n_heads * h)
+        return jnp.einsum("bf,fd->bd", out, lp["wo"]), k_cache, v_cache
+    kk = jnp.repeat(k_cache, rep, axis=2)
+    vv = jnp.repeat(v_cache, rep, axis=2)
+    scores = (
+        jnp.einsum("bhd,bkhd->bhk", q, kk, preferred_element_type=jnp.float32)
+        * scale
+    )
+    scores = jnp.where(scores_mask[:, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(dtype)
+    out = jnp.einsum("bhk,bkhd->bhd", probs, vv)
+    out = out.reshape(b, cfg.n_heads * h)
+    return jnp.einsum("bf,fd->bd", out, lp["wo"]), k_cache, v_cache
+
+
+def lm_decode_step(cfg: ArchConfig, params, cache, tokens, *,
+                   dtype=jnp.bfloat16, unroll=False):
+    """One decode step. tokens: (B,) int32. Returns (logits (B,V), cache)."""
+    cur = cache["cur"]
+    x = jnp.take(params["embed"].astype(dtype), tokens, axis=0)  # (B,D)
+
+    new_cache = dict(cache)
+    if "pos_buf" in cache:
+        sc = cache["pos_buf"].shape[0]
+        idx = jnp.mod(cur, sc)
+        new_cache["pos_buf"] = jax.lax.dynamic_update_slice(
+            cache["pos_buf"], cur[None], (idx,)
+        )
+
+    if cfg.family == "ssm":
+        def body(x, xs):
+            lp, ssm, conv = xs
+            lp = jax.tree.map(lambda p: p.astype(dtype), lp)
+            h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+            out, st = ssd_lib.ssd_block_decode(
+                cfg, lp, h, {"ssm": ssm, "conv": conv}, cfg.norm_eps
+            )
+            return x + out, (st["ssm"], st["conv"])
+
+        x, (ssm_new, conv_new) = scan_layers(
+            body, x, (params["layers"], cache["ssm"], cache["conv"]), unroll
+        )
+        new_cache.update({"ssm": ssm_new, "conv": conv_new})
+    elif cfg.family == "hybrid":
+        n_chunks = cfg.num_layers // cfg.hybrid_period
+
+        def chunk_body(x, xs):
+            lp, ssm, conv, kc, vc = xs
+            lp = jax.tree.map(lambda p: p.astype(dtype), lp)
+            x = _shared_decode(cfg, params["shared"], x,
+                               kc_vc=(kc, vc), pos_buf=new_cache["pos_buf"],
+                               cur=cur, dtype=dtype)
+            x, kc, vc = x
+
+            def inner(c, ys):
+                ilp, issm, iconv = ys
+                h = rmsnorm(c, ilp["ln1"], cfg.norm_eps)
+                out, st = ssd_lib.ssd_block_decode(
+                    cfg, ilp, h, {"ssm": issm, "conv": iconv}, cfg.norm_eps
+                )
+                return c + out, (st["ssm"], st["conv"])
+
+            x, (ssm, conv) = jax.lax.scan(inner, x, (lp, ssm, conv))
+            return x, (ssm, conv, kc, vc)
+
+        ssm_r = cache["ssm"].reshape(
+            (n_chunks, cfg.hybrid_period) + cache["ssm"].shape[1:]
+        )
+        conv_r = cache["conv"].reshape(
+            (n_chunks, cfg.hybrid_period) + cache["conv"].shape[1:]
+        )
+        x, (ssm_new, conv_new, k_new, v_new) = scan_layers(
+            chunk_body, x,
+            (params["layers"], ssm_r, conv_r, cache["k"], cache["v"]), unroll
+        )
+        new_cache.update(
+            {
+                "ssm": ssm_new.reshape(cache["ssm"].shape),
+                "conv": conv_new.reshape(cache["conv"].shape),
+                "k": k_new,
+                "v": v_new,
+            }
+        )
+    else:
+        def body(x, xs):
+            lp, kc, vc = xs
+            lp = jax.tree.map(lambda p: p.astype(dtype), lp)
+            h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+            a, kc, vc = _decode_attn(
+                cfg, lp, h, kc, vc, new_cache["pos_buf"], cur, dtype
+            )
+            x = x + a
+            h2 = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+            if cfg.is_moe:
+                m = moe_lib.moe_ffn_decode(cfg, lp, h2)
+            else:
+                m = gated_mlp(h2, lp["wi"], lp["wg"], lp["wo_mlp"])
+            return x + m, (kc, vc)
+
+        x, (k_new, v_new) = scan_layers(
+            body, x, (params["layers"], cache["k"], cache["v"]), unroll
+        )
+        new_cache.update({"k": k_new, "v": v_new})
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = lm_logits(cfg, params, x[:, None, :])[:, 0]
+    new_cache["cur"] = cur + 1
+    return logits, new_cache
+
+
+def _shared_decode(cfg, sp, x, *, kc_vc, pos_buf, cur, dtype):
+    sp = jax.tree.map(lambda p: p.astype(dtype), sp)
+    kc, vc = kc_vc
+    h = rmsnorm(x, sp["ln1"], cfg.norm_eps)
+    a, kc, vc = _decode_attn(cfg, sp, h, kc, vc, pos_buf, cur, dtype)
+    x = x + a
+    m = gated_mlp(rmsnorm(x, sp["ln2"], cfg.norm_eps), sp["wi"], sp["wg"], sp["wo_mlp"])
+    return x + m, kc, vc

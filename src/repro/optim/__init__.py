@@ -1,0 +1,16 @@
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+from repro.optim.schedule import warmup_cosine
+from repro.optim.compress import (
+    CompressionState,
+    compress_init,
+    ef_compress,
+    ef_decompress,
+    quantize_int8,
+    dequantize_int8,
+)
+
+__all__ = [
+    "AdamWState", "adamw_init", "adamw_update", "warmup_cosine",
+    "CompressionState", "compress_init", "ef_compress", "ef_decompress",
+    "quantize_int8", "dequantize_int8",
+]

@@ -1,0 +1,133 @@
+"""Logical-axis -> mesh-axis translation.
+
+Model code annotates parameters with *logical* axes ("embed", "vocab",
+"q_feat", ...).  A `MeshRules` (built from the arch's `ShardingPlan` and the
+physical mesh) resolves them to `PartitionSpec`s, dropping any assignment
+that does not divide the dimension (with GQA, small vocabularies etc. this
+is the production-realistic fallback: replicate what cannot be split).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ShardingPlan
+
+# fsdp_tp logical-axis table. Values are mesh axis names (or tuples).
+_FSDP_TP = {
+    "embed": "data",        # FSDP: shard d_model over data
+    "vocab": "model",
+    "q_feat": "model",      # flattened q heads x head_dim
+    "kv_feat": "model",     # dropped automatically when not divisible
+    "heads": "model",
+    "mlp": "model",
+    "moe_mlp": "model",     # expert FFN hidden (TP moe mode)
+    "experts": None,        # overridden to "model" in EP mode
+    "ssm_inner": "model",
+    "ssm_heads": "model",
+    "ssm_state": None,
+    "layers": None,
+    "conv": None,
+    None: None,
+}
+
+
+@dataclass(frozen=True)
+class MeshRules:
+    plan: ShardingPlan
+    mesh: Mesh
+
+    # -- internals ----------------------------------------------------------
+    def _axis_size(self, entry) -> int:
+        if entry is None:
+            return 1
+        if isinstance(entry, (tuple, list)):
+            sz = 1
+            for e in entry:
+                sz *= self.mesh.shape[e]
+            return sz
+        return self.mesh.shape[entry]
+
+    def _resolve(self, table, axes, shape) -> P:
+        out = []
+        for ax, dim in zip(axes, shape):
+            entry = table.get(ax, None)
+            if entry is not None and entry in self.mesh.axis_names:
+                if dim % self._axis_size(entry) == 0:
+                    out.append(entry)
+                    continue
+            out.append(None)
+        return P(*out)
+
+    # -- public -------------------------------------------------------------
+    @property
+    def data_axes(self):
+        """Axes over which the batch is sharded."""
+        axes = [a for a in ("pod", "data") if a in self.mesh.axis_names]
+        if self.plan.mode == "dp_only" and "model" in self.mesh.axis_names:
+            axes.append("model")
+        return tuple(axes)
+
+    @property
+    def tp_axis(self) -> Optional[str]:
+        if self.plan.mode == "dp_only":
+            return None
+        return "model" if "model" in self.mesh.axis_names else None
+
+    def param(self, axes, shape) -> P:
+        if self.plan.mode == "dp_only":
+            return P(*([None] * len(shape)))
+        table = dict(_FSDP_TP)
+        if self.plan.moe_mode == "ep":
+            table["experts"] = "model"
+            table["moe_mlp"] = None
+        return self._resolve(table, axes, shape)
+
+    def opt(self, axes, shape) -> P:
+        """Optimizer-state sharding. dp_only gets ZeRO-1 (dim0 sharded)."""
+        if self.plan.mode != "dp_only":
+            return self.param(axes, shape)
+        if not shape:
+            return P()
+        flat = self.data_axes
+        if shape[0] % self._axis_size(flat) == 0:
+            return P(flat, *([None] * (len(shape) - 1)))
+        if shape[0] % self._axis_size("data" if "data" in self.mesh.axis_names else None or ()) == 0 and "data" in self.mesh.axis_names:
+            return P("data", *([None] * (len(shape) - 1)))
+        return P(*([None] * len(shape)))
+
+    def batch(self, ndim: int, batch_dim: int = 0) -> P:
+        spec = [None] * ndim
+        spec[batch_dim] = self.data_axes
+        return P(*spec)
+
+    def activation(self, *axes) -> P:
+        """Activation sharding: 'batch' -> data axes, others via fsdp table
+        minus the FSDP entry (activations are not FSDP-sharded on embed)."""
+        table = dict(_FSDP_TP)
+        table["embed"] = None
+        if self.plan.mode == "dp_only":
+            table = {k: None for k in table}
+        if self.plan.moe_mode == "ep":
+            table["experts"] = "model"
+        out = []
+        for ax in axes:
+            if ax == "batch":
+                out.append(self.data_axes)
+            else:
+                out.append(table.get(ax, None))
+        return P(*out)
+
+    def named(self, pspec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, pspec)
+
+    def spec_tree_to_shardings(self, spec_tree):
+        return jax.tree.map(
+            lambda s: self.named(s),
+            spec_tree,
+            is_leaf=lambda x: isinstance(x, P),
+        )

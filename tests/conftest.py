@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Tests run on the single real CPU device (the dry-run forces 512 devices
+# in its own process only -- never here).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,70 @@
+"""Tier-2 AR(4)/RLS: convergence, stability, rebalancing (paper Eq. 2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ar4
+
+
+def test_rls_learns_ar_process():
+    """Feed a known AR(2) process; the predictor MAE must approach the
+    innovation noise floor."""
+    rng = np.random.default_rng(0)
+    a1, a2, sig = 0.6, 0.25, 0.01
+    u = np.zeros(1500)
+    for t in range(2, 1500):
+        u[t] = a1 * u[t - 1] + a2 * u[t - 2] + sig * rng.standard_normal()
+    st_ = ar4.init_rls(1)
+    errs = []
+    for t in range(1500):
+        st_, e = ar4.rls_update(st_, jnp.asarray([u[t]], jnp.float32))
+        errs.append(float(e[0]))
+    tail = np.mean(np.abs(errs[500:]))
+    assert tail < 2.5 * sig * np.sqrt(2 / np.pi)
+
+
+def test_rls_covariance_bounded():
+    st_ = ar4.init_rls(1)
+    for t in range(5000):
+        st_, _ = ar4.rls_update(st_, jnp.asarray([0.5], jnp.float32))
+    tr = float(jnp.trace(st_.P[0]))
+    assert np.isfinite(tr) and 0.0 < tr <= 1e4 * ar4.ORDER + 1.0
+
+
+@given(st.integers(1, 5))
+@settings(max_examples=10, deadline=None)
+def test_rls_batched_hosts_independent(n):
+    """Hosts see different series; each converges independently."""
+    key = jax.random.PRNGKey(0)
+    st_ = ar4.init_rls(n)
+    means = jnp.linspace(0.3, 0.9, n)
+    for t in range(300):
+        key, k = jax.random.split(key)
+        u = means + 0.01 * jax.random.normal(k, (n,))
+        st_, e = ar4.rls_update(st_, u)
+    pred = ar4.predict(st_)
+    assert np.allclose(np.asarray(pred), np.asarray(means), atol=0.05)
+
+
+def test_host_rebalance_respects_envelope_and_bounds():
+    pred = jnp.asarray([900.0, 400.0])
+    env = jnp.asarray([600.0, 600.0])
+    chip_power = jnp.asarray([[300.0, 300.0, 300.0], [150.0, 100.0, 150.0]])
+    caps = ar4.host_rebalance(pred, env, chip_power, 100.0, 300.0)
+    caps = np.asarray(caps)
+    assert caps.min() >= 100.0 - 1e-4 and caps.max() <= 300.0 + 1e-4
+    # over-budget host: cap sum ~ envelope
+    assert caps[0].sum() <= 600.0 * 1.05
+    # under-budget host: caps relax upward
+    assert caps[1].sum() >= 400.0
+
+
+@given(st.floats(100.0, 2000.0), st.floats(100.0, 2000.0))
+@settings(max_examples=30, deadline=None)
+def test_host_rebalance_never_nan(pred, env):
+    caps = ar4.host_rebalance(
+        jnp.asarray([pred]), jnp.asarray([env]),
+        jnp.asarray([[200.0, 180.0, 220.0]]), 100.0, 300.0)
+    assert np.isfinite(np.asarray(caps)).all()

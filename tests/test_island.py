@@ -1,0 +1,93 @@
+"""Safety island: trigger semantics, latency, determinism (paper Sect. 3.2)."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import island as island_lib
+from repro.core import tier3
+
+PORT = 47411
+
+
+def _mk(port):
+    rows = tier3.cap_table(3, 900.0, 100.0, 300.0).reshape(-1)
+    table = np.repeat(rows[:, None], 4, axis=1)
+    return island_lib.SafetyIsland(4, table, port=port)
+
+
+def test_trigger_writes_caps():
+    isl = _mk(PORT)
+    isl.start()
+    try:
+        time.sleep(0.05)
+        n0 = isl.trigger_count
+        isl.send_trigger(op_index=23, freq_hz=49.5)  # (mu=.9, rho=.3) row
+        assert isl.wait_for_trigger(n0)
+        expect = isl.table[23, 0]
+        assert np.allclose(isl.caps, expect)
+    finally:
+        isl.stop()
+
+
+def test_above_threshold_frequency_ignored():
+    isl = _mk(PORT + 1)
+    isl.start()
+    try:
+        time.sleep(0.05)
+        n0 = isl.trigger_count
+        isl.send_trigger(op_index=0, freq_hz=49.9)  # above 49.7: no FFR
+        time.sleep(0.1)
+        assert isl.trigger_count == n0
+    finally:
+        isl.stop()
+
+
+def test_bad_magic_ignored():
+    import socket, struct
+    isl = _mk(PORT + 2)
+    isl.start()
+    try:
+        time.sleep(0.05)
+        n0 = isl.trigger_count
+        s = socket.socket(socket.AF_INET, socket.SOCK_DGRAM)
+        s.sendto(struct.pack("<IIf", 0xDEAD, 0, 49.5), ("127.0.0.1", PORT + 2))
+        s.close()
+        time.sleep(0.1)
+        assert isl.trigger_count == n0
+    finally:
+        isl.stop()
+
+
+def test_dispatch_latency_under_budget():
+    """The measured decide+write path must sit far below the paper's
+    <50 us decide budget (hot path: one index + one vector store)."""
+    isl = _mk(PORT + 3)
+    isl.start()
+    try:
+        time.sleep(0.05)
+        for i in range(30):
+            n0 = isl.trigger_count
+            isl.send_trigger(op_index=i % 24, freq_hz=49.4)
+            assert isl.wait_for_trigger(n0)
+        n = min(isl.stats.count, isl.stats.capacity)
+        decide_us = isl.stats.decide_ns[:n] / 1e3
+        write_us = isl.stats.write_ns[:n] / 1e3
+        assert np.median(decide_us) < 200.0   # paper: <50 us on pinned core
+        assert np.median(write_us) < 500.0
+    finally:
+        isl.stop()
+
+
+def test_out_of_range_op_index_uses_armed_row():
+    isl = _mk(PORT + 4)
+    isl.arm(7)
+    isl.start()
+    try:
+        time.sleep(0.05)
+        n0 = isl.trigger_count
+        isl.send_trigger(op_index=0xFFFFFFFF, freq_hz=49.5)
+        assert isl.wait_for_trigger(n0)
+        assert np.allclose(isl.caps, isl.table[7, 0])
+    finally:
+        isl.stop()

@@ -1,0 +1,124 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret=True)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 else dict(
+        atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("b,s,h,hkv,d", [
+    (1, 128, 4, 4, 32),    # MHA
+    (2, 256, 4, 2, 64),    # GQA 2:1
+    (1, 256, 8, 1, 64),    # MQA
+    (2, 192, 6, 3, 16),    # padding path (192 % 128 != 0)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_causal(b, s, h, hkv, d, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, s, h, d), dtype)
+    k = jax.random.normal(ks[1], (b, s, hkv, d), dtype)
+    v = jax.random.normal(ks[2], (b, s, hkv, d), dtype)
+    out = ops.flash_attention(q, k, v, causal=True, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32),
+        **_tol(dtype))
+
+
+@pytest.mark.parametrize("window", [32, 64, 100])
+def test_flash_attention_sliding_window(window):
+    b, s, h, d = 1, 256, 2, 32
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, s, h, d))
+    k = jax.random.normal(ks[1], (b, s, h, d))
+    v = jax.random.normal(ks[2], (b, s, h, d))
+    out = ops.flash_attention(q, k, v, causal=True, window=window,
+                              interpret=True, block_q=64, block_k=64)
+    want = ref.attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_matches_model_blocked_attention():
+    from repro.models.layers import blocked_attention
+    b, s, h, d = 2, 512, 4, 32
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, s, h, d))
+    k = jax.random.normal(ks[1], (b, s, 2, d))
+    v = jax.random.normal(ks[2], (b, s, 2, d))
+    pallas_out = ops.flash_attention(q, k, v, causal=True, interpret=True)
+    xla_out = blocked_attention(q, k, v, causal=True, block_q=128)
+    np.testing.assert_allclose(np.asarray(pallas_out), np.asarray(xla_out),
+                               atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("b,s,nh,hd,ds,chunk,bh", [
+    (1, 64, 4, 16, 16, 16, 4),
+    (2, 128, 8, 16, 32, 32, 4),
+    (1, 256, 16, 32, 64, 64, 8),   # production-ish ratios
+    (2, 96, 4, 16, 16, 32, 2),
+])
+def test_ssd_scan_vs_sequential_oracle(b, s, nh, hd, ds, chunk, bh):
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (b, s, nh, hd))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, nh)))
+    A = -jnp.exp(0.5 * jax.random.normal(ks[2], (nh,)))
+    B = jax.random.normal(ks[3], (b, s, ds))
+    C = jax.random.normal(ks[4], (b, s, ds))
+    y = ops.ssd_scan(x, dt, A, B, C, chunk=chunk, block_heads=bh,
+                     interpret=True)
+    want = ref.ssd_ref(x, dt, A, B, C)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                               atol=5e-4, rtol=5e-3)
+
+
+def test_ssd_scan_bf16():
+    b, s, nh, hd, ds = 1, 128, 4, 16, 32
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (b, s, nh, hd), jnp.bfloat16)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, nh)))
+    A = -jnp.exp(0.5 * jax.random.normal(ks[2], (nh,)))
+    B = jax.random.normal(ks[3], (b, s, ds))
+    C = jax.random.normal(ks[4], (b, s, ds))
+    y = ops.ssd_scan(x, dt, A, B, C, chunk=32, interpret=True)
+    want = ref.ssd_ref(x.astype(jnp.float32), dt, A, B, C)
+    np.testing.assert_allclose(np.asarray(y, np.float32), np.asarray(want),
+                               atol=0.15, rtol=0.1)
+
+
+def test_ssd_scan_matches_model_chunked():
+    from repro.models.ssd import ssd_chunked
+    b, s, nh, hd, ds = 2, 128, 8, 16, 32
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (b, s, nh, hd))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, nh)))
+    A = -jnp.exp(0.5 * jax.random.normal(ks[2], (nh,)))
+    B = jax.random.normal(ks[3], (b, s, ds))
+    C = jax.random.normal(ks[4], (b, s, ds))
+    y_pallas = ops.ssd_scan(x, dt, A, B, C, chunk=32, interpret=True)
+    y_model, _ = ssd_chunked(x, dt, A, B, C, 32)
+    np.testing.assert_allclose(np.asarray(y_pallas), np.asarray(y_model),
+                               atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("n", [7, 128, 1024, 2500])
+def test_pid_update_matches_oracle(n):
+    ks = jax.random.split(KEY, 5)
+    tgt = jax.random.uniform(ks[0], (n,), minval=100, maxval=300)
+    pwr = jax.random.uniform(ks[1], (n,), minval=50, maxval=310)
+    tmp = jax.random.uniform(ks[2], (n,), minval=30, maxval=95)
+    integ = jax.random.uniform(ks[3], (n,), minval=-60, maxval=60)
+    perr = jax.random.uniform(ks[4], (n,), minval=-50, maxval=50)
+    got = ops.pid_update(tgt, pwr, tmp, integ, perr, interpret=True)
+    want = ref.pid_ref(tgt, pwr, tmp, integ, perr)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   atol=1e-4, rtol=1e-5)

@@ -1,0 +1,71 @@
+"""Tier-1 PID: settling, clamps, thermal fallback (paper Eq. 1)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import pid, plant
+
+
+def _rollout(p0, target, n, tau_ms):
+    state = pid.init_pid(1, p0)
+    pl = dataclasses.replace(plant.init_plant(1, cap=300.0),
+                             power=jnp.array([p0]))
+    targets = jnp.full((n, 1), target)
+    loads = jnp.full((n, 1), 0.97)
+    _, _, trace = pid.pid_rollout(state, pl, targets, loads, tau_ms=tau_ms)
+    return np.asarray(trace)[:, 0]
+
+
+@pytest.mark.parametrize("tau,budget_ms", [(6.0, 35), (7.0, 35), (9.7, 45)])
+def test_step_down_settles_fast(tau, budget_ms):
+    tr = _rollout(280.0, 200.0, 60, tau)
+    inband = np.abs(tr - 200.0) <= 4.0  # +/-2 % of setpoint
+    settle = next((k * 5 for k in range(len(tr)) if inband[k:].all()), None)
+    assert settle is not None and settle <= budget_ms
+
+
+def test_step_up_settles():
+    tr = _rollout(150.0, 250.0, 100, 6.0)
+    assert abs(tr[-1] - 250.0) < 5.0
+
+
+@given(st.floats(100.0, 300.0), st.floats(100.0, 300.0))
+@settings(max_examples=30, deadline=None)
+def test_output_always_saturated(target, power):
+    state = pid.init_pid(4)
+    _, u = pid.pid_step(state, jnp.float32(target), jnp.float32(power),
+                        jnp.float32(50.0))
+    assert float(jnp.min(u)) >= pid.U_MIN - 1e-4
+    assert float(jnp.max(u)) <= pid.U_MAX + 1e-4
+
+
+def test_anti_windup_clamp():
+    state = pid.init_pid(1)
+    # drive a persistent large error; the integral must stay clamped
+    for _ in range(2000):
+        state, _ = pid.pid_step(state, jnp.float32(300.0), jnp.float32(100.0),
+                                jnp.float32(40.0))
+    assert abs(float(state.integ[0])) <= pid.WINDUP_CLAMP + 1e-4
+
+
+def test_thermal_fallback_caps_at_200():
+    state = pid.init_pid(1)
+    hot = jnp.float32(92.0)  # predicted junction above 85 C
+    _, u = pid.pid_step(state, jnp.float32(300.0), jnp.float32(295.0), hot)
+    assert float(u[0]) <= pid.FALLBACK_CAP + 1e-4
+
+
+def test_pid_tracks_bursty_load():
+    state = pid.init_pid(1, 250.0)
+    pl = plant.init_plant(1, cap=300.0)
+    key = jax.random.PRNGKey(0)
+    t = jnp.arange(0, 10.0, 1.0 / plant.CONTROL_HZ)
+    loads = plant.workload_load("bursty", t, key)[:, None]
+    targets = jnp.full_like(loads, 250.0)
+    _, _, trace = pid.pid_rollout(state, pl, targets, loads, tau_ms=9.7)
+    # during ON phases power approaches min(demand, target)
+    assert float(jnp.max(trace)) <= 260.0

@@ -1,0 +1,102 @@
+"""Plant physics: power model, cap inverse, E1 surface, thermal."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import plant
+
+
+def test_power_model_calibration_points():
+    # (150 W, 945 MHz) is exact by construction
+    assert float(plant.power_model(945.0, 1.0)) == pytest.approx(150.0, abs=0.5)
+    # max boost at full load ~ TDP
+    assert float(plant.power_model(plant.F_MAX, 1.0)) == pytest.approx(
+        300.0, abs=1.0)
+    # idle
+    assert float(plant.power_model(plant.F_MIN, 0.0)) < 60.0
+
+
+@given(cap=st.floats(105.0, 300.0), load=st.floats(0.3, 1.0))
+@settings(max_examples=50, deadline=None)
+def test_freq_at_cap_inverts_power_model(cap, load):
+    f = float(plant.freq_at_cap(cap, load))
+    p = float(plant.power_model(f, load))
+    if plant.F_MIN < f < plant.F_MAX:  # interior solution must hit the cap
+        assert p == pytest.approx(cap, rel=0.02)
+    else:  # clipped: power must not exceed the cap beyond model noise
+        assert p <= cap + 1.0 or f == plant.F_MIN
+
+
+def test_e1_best_point_is_150w_945mhz():
+    caps = np.array([100., 125., 150., 200., 250., 300.])
+    freqs = np.array([810., 945., 1080., 1215., 1380., 1530.])
+    combined = np.zeros((6, 6))
+    for w in plant.WORKLOADS:
+        grid = np.array([[float(plant.iterations_per_joule(w, c, f))
+                          for f in freqs] for c in caps])
+        combined += grid / grid.max()
+        # each workload's own best is within 5 % of the common point
+        assert grid[2, 1] >= 0.95 * grid.max(), w
+    i, j = np.unravel_index(np.argmax(combined), combined.shape)
+    assert (caps[i], freqs[j]) == (150.0, 945.0)
+
+
+def test_e1_best_point_values_match_paper():
+    # paper: 2.880 / 0.570 / 0.549 it/J for inference / matmul / bursty
+    vals = {w: float(plant.iterations_per_joule(w, 150.0, 945.0))
+            for w in plant.WORKLOADS}
+    assert vals["inference"] == pytest.approx(2.880, rel=0.02)
+    assert vals["matmul"] == pytest.approx(0.570, rel=0.02)
+    assert vals["bursty"] == pytest.approx(0.549, rel=0.02)
+
+
+def test_thermal_first_order():
+    st_ = plant.init_plant(1)
+    st_ = plant.write_cap(st_, 300.0)
+    # hold full power for 8 s (one tau) -> ~63 % of the way to T_inf
+    for _ in range(1600):
+        st_ = plant.plant_step(st_, jnp.array([1.0]), 5.0, tau_ms=6.0)
+    t_inf = plant.T_AMBIENT_INT + plant.R_TH * float(st_.power[0])
+    frac = (float(st_.temp[0]) - plant.T_AMBIENT_INT) / (
+        t_inf - plant.T_AMBIENT_INT)
+    assert 0.55 < frac < 0.72
+
+
+def test_governor_slew_limits_cap_drops():
+    import dataclasses
+    st_ = plant.init_plant(1)
+    st_ = dataclasses.replace(st_, power=jnp.array([280.0]))
+    st_ = plant.write_cap(st_, 150.0)
+    p_prev = 280.0
+    for _ in range(30):
+        st_ = plant.plant_step(st_, jnp.array([1.0]), 1.0, tau_ms=6.0,
+                               slew_w_ms=plant.GOV_SLEW)
+        drop = p_prev - float(st_.power[0])
+        assert drop <= plant.GOV_SLEW * p_prev * 1.0 + 1e-3
+        p_prev = float(st_.power[0])
+    # multiplicative slew -> ~95 ms to cross 95 % of an 80 W step (E7)
+
+
+@given(st.floats(0.0, 1.0), st.floats(405.0, 1530.0))
+@settings(max_examples=50, deadline=None)
+def test_power_model_monotone(load, f):
+    p = float(plant.power_model(f, load))
+    assert plant.P_IDLE - 1e-3 <= p <= 305.0
+    # monotone in load
+    assert float(plant.power_model(f, min(load + 0.1, 1.0))) >= p - 1e-4
+
+
+def test_workload_archetype_means():
+    import jax
+    t = jnp.arange(0, 60.0, 0.01)
+    key = jax.random.PRNGKey(0)
+    for w, lo, hi in [("matmul", 0.9, 1.0), ("inference", 0.5, 0.65),
+                      ("bursty", 0.35, 0.62)]:
+        L = plant.workload_load(w, t, key)
+        m = float(jnp.mean(L))
+        assert lo < m < hi, (w, m)
+    # inference power stays below 200 W
+    p = plant.power_model(plant.F_NOMINAL,
+                          plant.workload_load("inference", t, key))
+    assert float(jnp.mean(p)) < 200.0

@@ -1,0 +1,45 @@
+"""Four-component PUE model (paper Eq. 4)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.core.pue as pue
+
+
+def test_design_point_calibration():
+    assert float(pue.pue(1.0, pue.T_REF)) == pytest.approx(1.20, abs=1e-3)
+
+
+def test_floors_drive_pue_up_at_low_load():
+    assert float(pue.pue(0.15, 18.0)) > float(pue.pue(0.8, 18.0))
+
+
+def test_free_cooling_ramp():
+    assert float(pue.free_cooling_fraction(26.0)) == 0.0
+    assert float(pue.free_cooling_fraction(11.0)) == 1.0
+    assert 0.0 < float(pue.free_cooling_fraction(18.0)) < 1.0
+    # cold day -> lower PUE
+    assert float(pue.pue(1.0, 5.0)) < float(pue.pue(1.0, 24.0))
+
+
+@given(st.floats(0.05, 1.0), st.floats(-10.0, 35.0))
+@settings(max_examples=100, deadline=None)
+def test_pue_bounds(load, t_amb):
+    p = float(pue.pue(load, t_amb))
+    assert 1.0 < p < 2.5
+
+
+@given(st.floats(0.5, 0.9), st.floats(0.1, 0.3), st.floats(-5.0, 30.0))
+@settings(max_examples=50, deadline=None)
+def test_meter_gain_positive_and_bounded(mu, rho, t):
+    g = float(pue.ffr_meter_gain(mu, rho, t))
+    assert 0.8 < g < 1.6
+
+
+def test_meter_underdelivery_vs_static_pue():
+    """The paper's L3: a PUE-blind controller under-delivers 4-7 pp when
+    the shed lands where the L^2/L^3 floors bind."""
+    g = float(pue.ffr_meter_gain(0.55, 0.3, 18.0))
+    delivery_vs_static = g / pue.PUE_DESIGN
+    assert 0.90 < delivery_vs_static < 0.99

@@ -1,0 +1,40 @@
+"""Tier-3 operating-point selector (paper Eq. 3)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import tier3
+
+
+def test_selection_pattern_matches_fig4():
+    """Green-rich windows -> mu = 0.9; dirty windows -> mu = 0.4."""
+    sel = tier3.Tier3Selector(pue_aware=True)
+    ci = np.array([600.0] * 8 + [50.0] * 8 + [600.0] * 8)
+    t_amb = np.full(24, 15.0)
+    op = sel.select_day(ci, t_amb)
+    mu = np.asarray(op.mu)
+    rho = np.asarray(op.rho)
+    assert (mu[8:16] == 0.9).all()
+    assert (mu[:8] <= 0.5).all()
+    assert rho.mean() >= 0.15  # a real reserve band is held
+
+
+def test_feasibility_constraint():
+    """mu - rho below the fleet floor scores zero."""
+    q = tier3.q_ffr(0.4, 0.3, 18.0, pue_aware=True)
+    assert float(q) == 0.0
+
+
+def test_pue_aware_beats_blind_at_meter():
+    qa = float(tier3.q_ffr(0.6, 0.3, 18.0, pue_aware=True))
+    qb = float(tier3.q_ffr(0.6, 0.3, 18.0, pue_aware=False))
+    assert qa >= qb
+
+
+def test_cap_table_monotone_and_bounded():
+    t = tier3.cap_table(3, 900.0, 100.0, 300.0)
+    assert t.shape == (len(tier3.MU_GRID), len(tier3.RHO_GRID))
+    assert (t >= 100.0).all() and (t <= 300.0).all()
+    # higher mu -> higher residual cap; higher rho -> lower cap
+    assert (np.diff(t, axis=0) >= -1e-5).all()
+    assert (np.diff(t, axis=1) <= 1e-5).all()

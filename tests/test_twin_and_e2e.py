@@ -1,0 +1,42 @@
+"""Digital twin + paper-number integration checks (fast versions)."""
+import numpy as np
+import pytest
+
+from repro.core import twin as twin_lib
+from repro.grid import signals
+
+
+@pytest.fixture(scope="module")
+def twin_result():
+    cfg = twin_lib.TwinConfig(n_hosts=12, seconds=5400, seed=1)
+    grid = signals.make_grid("DE", 48, seed=1)
+    return twin_lib.run_twin(cfg, grid), cfg, grid
+
+
+def test_twin_finite_and_tracking(twin_result):
+    (out, summary), cfg, grid = twin_result
+    assert np.isfinite(np.asarray(out.it_power)).all()
+    assert summary["ar4_mae_norm"] < 0.08
+    assert summary["tracking_err_mean"] < 0.25
+
+
+def test_twin_ffr_delivery(twin_result):
+    (out, summary), cfg, grid = twin_result
+    # FFR delivery quality at the meter (paper Fig 4: ~1.0)
+    if not np.isnan(summary["q_ffr"]):
+        assert summary["q_ffr"] > 0.6
+
+
+def test_twin_facility_above_it(twin_result):
+    (out, summary), cfg, grid = twin_result
+    fac = np.asarray(out.facility_power)
+    it = np.asarray(out.it_power)
+    assert (fac >= it * 1.05).all()  # PUE > 1.05 always
+
+
+def test_net_co2_decomposition(twin_result):
+    (out, summary), cfg, grid = twin_result
+    d = twin_lib.net_co2_decomposition(cfg, grid, summary)
+    assert d["co2_operational_t"] < d["co2_baseline_t"]
+    assert d["co2_exogenous_t"] > 0
+    assert 0 < d["net_savings_pct"] < 60
