@@ -17,14 +17,32 @@ board does not.
 Paper: 2.5-5.8 pp at 50 MW across the six grids, widest on low-CI grids
 (there the CI ranking is nearly flat, so the PUE term dominates the
 ordering); smaller sites see more load noise -> floors bind more often.
+
+Batched engine: every (country x season x seed x MW level x PUE design)
+combination -- including the E9 design-sensitivity axis -- is stacked into
+one :class:`repro.grid.scenarios.ScenarioBatch` and replayed as ONE jitted
+``vmap(scan)`` call (`sweep_batched`).  `sweep_loop` replays the identical
+per-scenario function in a Python loop of independent scans; it exists as
+the parity reference and the speed baseline for the `e8_batched` entry.
 """
 from __future__ import annotations
 
+import time
+
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, save_json
+import repro.core.dispatch as dispatch
 import repro.core.pue as pue_lib
-from repro.grid.signals import COUNTRY_ORDER, make_grid
+from repro.grid.scenarios import (
+    ScenarioBatch,
+    ScenarioSpec,
+    build_scenario_batch,
+    masked_quantile_sorted,
+)
+from repro.grid.signals import COUNTRY_ORDER
 
 HORIZON_H = 28 * 24
 MW_LEVELS = (1.0, 10.0, 50.0)
@@ -32,103 +50,187 @@ MU_HI = 0.9
 LO_LEVELS = (0.15, 0.25, 0.4)   # how deep the dirty-window shed goes
 DEMAND = 0.6            # mean utilisation the trace requires
 
-
-def _schedule(signal: np.ndarray, work_h: float, lo: float) -> np.ndarray:
-    """Greedy: run MU_HI in the best-signal hours until the work budget is
-    met, `lo` elsewhere (deferral depth; deferred fleets idle near the
-    floor, consolidated fleets keep dirty-window utilisation moderate)."""
-    H = len(signal)
-    n_hi = int(round((work_h - lo * H) / (MU_HI - lo)))
-    n_hi = int(np.clip(n_hi, 0, H))
-    mu = np.full(H, lo)
-    mu[np.argsort(signal)[:n_hi]] = MU_HI
-    return mu
+METRIC_KEYS = (
+    "delta_facility_pp", "facility_reduction_blind_pp",
+    "facility_reduction_aware_pp", "it_reduction_blind_pp",
+    "cooling_drag_pp", "shed_depth_blind", "shed_depth_aware",
+    "cfe_blind", "cfe_aware",
+)
 
 
-def delta_facility(country: str, mw: float, seed: int = 0,
-                   start_day: int = 100,
-                   pue_design: float = pue_lib.PUE_DESIGN) -> dict:
-    grid = make_grid(country, HORIZON_H, seed=seed,
-                     start_day_of_year=start_day)
-    rng = np.random.default_rng(seed + 23)
-    ci, t_amb = grid.ci, grid.t_amb
+# ---------------------------------------------------------------------------
+# Per-scenario replay: pure JAX, one lax.scan over hours; vmapped below.
+# ---------------------------------------------------------------------------
 
-    # site-size effect: smaller fleets see noisier realised utilisation
-    # (job granularity), so the L^2/L^3 floors bind more often.
-    load_noise = rng.normal(0.0, 0.10 / np.sqrt(mw), HORIZON_H)
 
-    work = DEMAND * HORIZON_H
-    pue_hi = np.asarray(pue_lib.pue(MU_HI, t_amb, pue_design=pue_design))
+def _scenario_metrics(ci, t_amb, mask, noise, pue_design) -> dict:
+    """All E8 metrics of one scenario.  ci/t_amb/mask/noise: (H,)."""
+    hv = jnp.sum(mask)
+    work = DEMAND * hv
+    los = jnp.asarray(LO_LEVELS, jnp.float32)                    # (L,)
+    n_hi = jnp.clip(jnp.round((work - los * hv) / (MU_HI - los)), 0.0, hv)
 
-    def costs(mu):
-        load = np.clip(mu + load_noise, 0.05, 1.0)
-        p = np.asarray(pue_lib.pue(load, t_amb, pue_design=pue_design))
-        return float(np.sum(load * p * ci)), float(np.sum(load * ci))
+    pue_hi = pue_lib.pue(MU_HI, t_amb, pue_design=pue_design)    # (H,)
+    # one value-sort per signal; shed-depth thresholds AND the green-hour
+    # quantile (blind signal == ci) all reuse the sorted arrays
+    sigs = jnp.stack([ci, ci * pue_hi])                          # (2, H)
+    sigs_sorted = jnp.sort(jnp.where(mask[None] > 0, sigs, jnp.inf), axis=-1)
+    thr = jax.vmap(
+        lambda s: dispatch.thresholds_from_sorted(s, n_hi))(sigs_sorted)
+    sched = jax.vmap(
+        lambda sig, t: jax.vmap(
+            lambda t_l, lo: dispatch.schedule_from_threshold(
+                sig, t_l, lo, mask, MU_HI)
+        )(t, los)
+    )(sigs, thr)                                                 # (2, L, H)
 
-    # Each controller picks (ranking signal, shed depth) by its OWN
-    # accounting.  The blind one optimises board CO2 (static PUE cancels),
-    # so it sheds as deep as possible and ranks by CI alone; the aware one
-    # optimises the meter, seeing both the free-cooling alignment and the
-    # PUE-floor penalty of deep partial-load operation.
-    blind_best, aware_best = None, None
-    for lo in LO_LEVELS:
-        mu_b = _schedule(ci, work, lo)
-        mu_a = _schedule(ci * pue_hi, work, lo)
-        fb, ib = costs(mu_b)
-        fa, ia = costs(mu_a)
-        if blind_best is None or ib < blind_best[0]:
-            blind_best = (ib, fb, lo, mu_b)
-        if aware_best is None or fa < aware_best[0]:
-            aware_best = (fa, ia, lo, mu_a)
-    it_b, fac_b, lo_b, mu_b = blind_best
-    fac_a, it_a, lo_a, mu_a = aware_best
+    # site-size noise rides on every candidate, including the flat baseline
+    flat = jnp.where(mask > 0, DEMAND, 0.0)
+    candidates = jnp.concatenate(
+        [sched.reshape(-1, mask.shape[0]), flat[None]], axis=0
+    )                                                            # (2L+1, H)
+    tot = dispatch.replay_schedule(
+        candidates + noise[None], ci, t_amb, mask, pue_design=pue_design
+    )
+    n_lo = los.shape[0]
+    fac = tot["co2"]      # meter-side cost integral, (2L+1,)
+    it = tot["co2_it"]    # board-side cost integral
 
-    fac_0, it_0 = costs(np.full(HORIZON_H, DEMAND))
-    red_b = 100.0 * (fac_0 - fac_b) / fac_0
-    red_a = 100.0 * (fac_0 - fac_a) / fac_0
-    red_it_b = 100.0 * (it_0 - it_b) / it_0
-    green = np.percentile(ci, 50)
-    cfe = lambda mu: float(np.sum(mu[ci <= green]) / np.sum(mu))
+    # Each controller picks its shed depth by its OWN accounting: the blind
+    # one optimises board CO2 (static PUE cancels), the aware one the meter.
+    i_b = jnp.argmin(it[:n_lo])
+    i_a = jnp.argmin(fac[n_lo:2 * n_lo])
+    fac_0, it_0 = fac[-1], it[-1]
+    red_b = 100.0 * (fac_0 - fac[i_b]) / fac_0
+    red_a = 100.0 * (fac_0 - fac[n_lo + i_a]) / fac_0
+    red_it_b = 100.0 * (it_0 - it[i_b]) / it_0
+
+    green = masked_quantile_sorted(sigs_sorted[0], hv, 50.0)
+
+    def cfe(mu):
+        hit = jnp.where((ci <= green) & (mask > 0), mu, 0.0)
+        return jnp.sum(hit) / jnp.maximum(jnp.sum(mu * mask), 1e-9)
+
     return {
-        "country": country, "mw": mw,
         "delta_facility_pp": red_a - red_b,
         "facility_reduction_blind_pp": red_b,
         "facility_reduction_aware_pp": red_a,
         "it_reduction_blind_pp": red_it_b,
         "cooling_drag_pp": red_it_b - red_b,   # board-claim vs meter gap
-        "shed_depth_blind": lo_b, "shed_depth_aware": lo_a,
-        "cfe_blind": cfe(mu_b), "cfe_aware": cfe(mu_a),
+        "shed_depth_blind": los[i_b],
+        "shed_depth_aware": los[i_a],
+        "cfe_blind": cfe(sched[0, i_b]),
+        "cfe_aware": cfe(sched[1, i_a]),
     }
 
 
-def run(fast: bool = False) -> dict:
-    rows = []
+@jax.jit
+def sweep_batched(batch: ScenarioBatch, noise) -> dict:
+    """The full sweep as ONE compiled vmap(scan): dict of (N,) metrics."""
+    return jax.vmap(_scenario_metrics)(
+        batch.ci, batch.t_amb, batch.mask, noise, batch.pue_design
+    )
+
+
+_scenario_metrics_jit = jax.jit(_scenario_metrics)
+
+
+def sweep_loop(batch: ScenarioBatch, noise) -> dict:
+    """Per-scenario Python loop of independent jitted scans (the old shape
+    of this benchmark).  Parity reference + speed baseline."""
+    rows = [
+        _scenario_metrics_jit(batch.ci[i], batch.t_amb[i], batch.mask[i],
+                              noise[i], batch.pue_design[i])
+        for i in range(batch.n)
+    ]
+    return {k: jnp.stack([r[k] for r in rows]) for k in METRIC_KEYS}
+
+
+def noise_for(batch: ScenarioBatch) -> jnp.ndarray:
+    """Site-size load noise per scenario: smaller fleets see noisier
+    realised utilisation (job granularity), so the L^2/L^3 floors bind
+    more often.  Same rng stream as the original serial benchmark."""
+    seeds = np.asarray(batch.seed)
+    mws = np.asarray(batch.mw, np.float64)
+    out = np.zeros((batch.n, batch.h_max), np.float32)
+    for i in range(batch.n):
+        rng = np.random.default_rng(int(seeds[i]) + 23)
+        out[i] = rng.normal(0.0, 0.10 / np.sqrt(mws[i]), batch.h_max)
+    return jnp.asarray(out)
+
+
+# ---------------------------------------------------------------------------
+# Batch assembly + reporting
+# ---------------------------------------------------------------------------
+
+
+def build_e8_batch(fast: bool = False):
+    """One batch covering Fig 5a, Fig 5b, and the E9 design axis.
+
+    Returns (batch, groups) where each group is (kind, country, level,
+    scenario indices) and `level` is the MW size (fig5) or PUE design (e9);
+    a group's metrics are averaged over its season x seed replicas.
+    """
     countries = COUNTRY_ORDER if not fast else ["SE", "DE", "PL"]
     seeds = (0,) if fast else (0, 1, 2)
-
     # year coverage: winter/spring/summer/autumn months (free cooling only
     # modulates PUE in the shoulder/summer T range)
     seasons = (15, 105, 196, 288) if not fast else (105, 196)
 
-    def avg(country, mw):
-        rs = [delta_facility(country, mw, seed=s, start_day=d)
-              for s in seeds for d in seasons]
-        out = dict(rs[0])
-        for k, v in out.items():
-            if isinstance(v, float):
-                out[k] = float(np.mean([r[k] for r in rs]))
-        return out
+    specs: list[ScenarioSpec] = []
+    groups: list[tuple] = []
+    seen: dict[ScenarioSpec, int] = {}   # identical specs replay once
+
+    def add_group(kind, country, level, mw, pue_design, g_seeds):
+        idx = []
+        for s in g_seeds:
+            for d in seasons:
+                spec = ScenarioSpec(country=country, seed=s, start_day=d,
+                                    mw=mw, pue_design=pue_design,
+                                    horizon_h=HORIZON_H)
+                if spec not in seen:
+                    seen[spec] = len(specs)
+                    specs.append(spec)
+                idx.append(seen[spec])
+        groups.append((kind, country, level, idx))
 
     for c in countries:
-        r = avg(c, 10.0)
-        rows.append(r)
-        emit(f"e8.delta_pp.10mw.{c}", round(r["delta_facility_pp"], 2),
-             "paper fig5a")
+        add_group("fig5a", c, 10.0, 10.0, pue_lib.PUE_DESIGN, seeds)
     for c in ("SE", "PL"):
         for mw in MW_LEVELS:
-            r = avg(c, mw)
-            rows.append(r)
-            emit(f"e8.delta_pp.{int(mw)}mw.{c}",
+            add_group("fig5b", c, mw, mw, pue_lib.PUE_DESIGN, seeds)
+    for pd in (1.10, 1.20, 1.30, 1.40):
+        for c in ("SE", "PL"):
+            add_group("e9", c, pd, 10.0, pd, (0,))
+    return build_scenario_batch(specs), groups
+
+
+def _group_rows(metrics: dict, groups: list[tuple]) -> list[dict]:
+    rows = []
+    for kind, country, level, idx in groups:
+        row = {"kind": kind, "country": country, "mw": float(level)}
+        for k in METRIC_KEYS:
+            row[k] = float(np.mean(np.asarray(metrics[k])[idx]))
+        rows.append(row)
+    return rows
+
+
+def run(fast: bool = False) -> dict:
+    batch, groups = build_e8_batch(fast)
+    noise = noise_for(batch)
+    metrics = jax.tree.map(np.asarray, sweep_batched(batch, noise))
+    emit("e8.scenarios_in_one_call", batch.n,
+         "one jitted vmap(scan) over the full sweep")
+
+    all_rows = _group_rows(metrics, groups)
+    rows = [r for r in all_rows if r["kind"] in ("fig5a", "fig5b")]
+    for r in all_rows:
+        if r["kind"] == "fig5a":
+            emit(f"e8.delta_pp.10mw.{r['country']}",
+                 round(r["delta_facility_pp"], 2), "paper fig5a")
+    for r in all_rows:
+        if r["kind"] == "fig5b":
+            emit(f"e8.delta_pp.{int(r['mw'])}mw.{r['country']}",
                  round(r["delta_facility_pp"], 2), "paper fig5b")
     # Delta_facility headline: the cooling-overhead drag the PUE-aware
     # controller closes = the blind controller's board-claim vs meter gap
@@ -146,16 +248,72 @@ def run(fast: bool = False) -> dict:
     emit("e8.scheduling_delta_pp", f"{min(sched):.1f}-{max(sched):.1f}",
          "aware-vs-blind schedule difference at the meter")
 
-    # E9 (the paper's planned journal extension): PUE_design sensitivity.
-    for pd in (1.10, 1.20, 1.30, 1.40):
-        rs = [delta_facility(c, 10.0, seed=0, start_day=d, pue_design=pd)
-              for c in ("SE", "PL") for d in seasons]
-        dr = float(np.mean([r["cooling_drag_pp"] for r in rs]))
-        emit(f"e9.drag_pp.design_{pd:.2f}", round(dr, 2),
+    # E9 (the paper's planned journal extension): PUE_design sensitivity --
+    # now just extra scenarios in the same batch.
+    e9 = {}
+    for r in all_rows:
+        if r["kind"] == "e9":
+            e9.setdefault(r["mw"], []).append(r["cooling_drag_pp"])
+    for pd in sorted(e9):
+        emit(f"e9.drag_pp.design_{pd:.2f}",
+             round(float(np.mean(e9[pd])), 2),
              "paper E9: ~linear in (PUE_design - 1)")
     save_json("e8_sweep.json", rows)
     return {"rows": rows}
 
 
+def run_batched_bench(fast: bool = False, reps: int = 3) -> dict:
+    """`e8_batched`: scenarios/sec, Python loop of scans vs one vmap(scan).
+
+    Best-of-`reps` per path: the loop baseline is dominated by per-call
+    dispatch overhead, which is noisy under CPU contention; min-time is the
+    standard de-noised estimate for both.
+    """
+    batch, _ = build_e8_batch(fast)
+    noise = noise_for(batch)
+
+    # warm both compile caches before timing
+    jax.block_until_ready(sweep_batched(batch, noise)["delta_facility_pp"])
+    jax.block_until_ready(
+        _scenario_metrics_jit(batch.ci[0], batch.t_amb[0], batch.mask[0],
+                              noise[0], batch.pue_design[0])
+        ["delta_facility_pp"])
+
+    def timed(fn):
+        best, result = float("inf"), None
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            result = fn()
+            jax.block_until_ready(result["delta_facility_pp"])
+            best = min(best, time.perf_counter() - t0)
+        return best, result
+
+    t_loop, loop = timed(lambda: sweep_loop(batch, noise))
+    t_vmap, vm = timed(lambda: sweep_batched(batch, noise))
+
+    err = max(
+        float(np.max(np.abs(np.asarray(loop[k]) - np.asarray(vm[k]))))
+        for k in METRIC_KEYS
+    )
+    res = {
+        "n_scenarios": batch.n,
+        "loop_scenarios_per_sec": batch.n / t_loop,
+        "vmap_scenarios_per_sec": batch.n / t_vmap,
+        "speedup_x": t_loop / t_vmap,
+        "max_abs_parity_err": err,
+    }
+    emit("e8_batched.n_scenarios", batch.n, "")
+    emit("e8_batched.loop_scen_per_s", round(res["loop_scenarios_per_sec"], 1),
+         "python loop of independent scans")
+    emit("e8_batched.vmap_scen_per_s", round(res["vmap_scenarios_per_sec"], 1),
+         "one jitted vmap(scan)")
+    emit("e8_batched.speedup_x", round(res["speedup_x"], 1), "target >= 5x")
+    emit("e8_batched.parity_max_abs_err", f"{err:.2e}",
+         "loop vs vmap, all metrics")
+    save_json("e8_batched.json", res)
+    return res
+
+
 if __name__ == "__main__":
     run()
+    run_batched_bench()

@@ -35,6 +35,8 @@ def main(argv=None) -> int:
         ("e4", lambda: e4_closed_loop.run()),
         ("e7", lambda: e7_fr_latency.run()),
         ("e8", lambda: e8_multicountry.run(fast=args.fast)),
+        ("e8_batched",
+         lambda: e8_multicountry.run_batched_bench(fast=args.fast)),
         ("fig4", lambda: cluster_24h.run(fast=args.fast)),
         ("roofline", lambda: roofline.emit_table()),
     ]

@@ -7,7 +7,8 @@ trainer-facing composition (controller).
 """
 from repro.core.controller import GridPilot, PowerPlan, plan_from_operating_point
 from repro.core.plant import PlantState, init_plant, plant_step, power_model
-from repro.core.pid import PIDState, init_pid, pid_step, pid_rollout
+from repro.core.pid import (PIDState, init_pid, pid_step, pid_rollout,
+                            pid_rollout_batch)
 from repro.core.ar4 import RLSState, init_rls, predict, rls_update
 from repro.core.tier3 import Tier3Selector, OperatingPoint, q_ffr, cap_table
 # NB: the `pue` *function* is exported as `instantaneous_pue` so the package
@@ -15,17 +16,24 @@ from repro.core.tier3 import Tier3Selector, OperatingPoint, q_ffr, cap_table
 from repro.core.pue import pue as instantaneous_pue
 from repro.core.pue import facility_power, free_cooling_fraction
 from repro.core.island import SafetyIsland, PythonSupervisor
-from repro.core.dispatch import GridPilotDispatcher, Job
-from repro.core.twin import TwinConfig, run_twin, net_co2_decomposition
+from repro.core.dispatch import (GridPilotDispatcher, Job, replay_schedule,
+                                 schedule_from_threshold, signal_thresholds)
+from repro.core.twin import (TwinConfig, TwinInputs, TwinScenario,
+                             net_co2_decomposition, prepare_scenario,
+                             run_twin, run_twin_batch, stack_scenarios,
+                             summarize_twin)
 
 __all__ = [
     "GridPilot", "PowerPlan", "plan_from_operating_point",
     "PlantState", "init_plant", "plant_step", "power_model",
-    "PIDState", "init_pid", "pid_step", "pid_rollout",
+    "PIDState", "init_pid", "pid_step", "pid_rollout", "pid_rollout_batch",
     "RLSState", "init_rls", "predict", "rls_update",
     "Tier3Selector", "OperatingPoint", "q_ffr", "cap_table",
     "instantaneous_pue", "facility_power", "free_cooling_fraction",
     "SafetyIsland", "PythonSupervisor",
-    "GridPilotDispatcher", "Job",
-    "TwinConfig", "run_twin", "net_co2_decomposition",
+    "GridPilotDispatcher", "Job", "replay_schedule",
+    "schedule_from_threshold", "signal_thresholds",
+    "TwinConfig", "TwinInputs", "TwinScenario", "net_co2_decomposition",
+    "prepare_scenario", "run_twin", "run_twin_batch", "stack_scenarios",
+    "summarize_twin",
 ]

@@ -70,13 +70,8 @@ def pid_step(state: PIDState, target, power, temp,
     return PIDState(integ=integ, prev_err=err, u=u), u
 
 
-@partial(jax.jit, static_argnames=("tau_ms",))
-def pid_rollout(state: PIDState, plant: plant_lib.PlantState, targets,
-                loads, tau_ms: float = 6.0):
-    """Closed-loop rollout: scan PID + plant over a (T, n) target/load grid.
-
-    Returns (final pid state, final plant state, power trace (T, n)).
-    """
+def _pid_rollout_impl(state: PIDState, plant: plant_lib.PlantState, targets,
+                      loads, tau_ms: float):
     dt_ms = 1000.0 * DT_S
 
     def tick(carry, xs):
@@ -89,3 +84,27 @@ def pid_rollout(state: PIDState, plant: plant_lib.PlantState, targets,
 
     (pid, pl), trace = jax.lax.scan(tick, (state, plant), (targets, loads))
     return pid, pl, trace
+
+
+@partial(jax.jit, static_argnames=("tau_ms",))
+def pid_rollout(state: PIDState, plant: plant_lib.PlantState, targets,
+                loads, tau_ms: float = 6.0):
+    """Closed-loop rollout: scan PID + plant over a (T, n) target/load grid.
+
+    Returns (final pid state, final plant state, power trace (T, n)).
+    """
+    return _pid_rollout_impl(state, plant, targets, loads, tau_ms)
+
+
+@partial(jax.jit, static_argnames=("tau_ms",))
+def pid_rollout_batch(state: PIDState, plant: plant_lib.PlantState, targets,
+                      loads, tau_ms: float = 6.0):
+    """`pid_rollout` vmapped over a leading scenario axis.
+
+    Every argument carries a leading (N,) axis (stack per-scenario states
+    with `jax.tree.map(lambda *x: jnp.stack(x), ...)`); the N closed-loop
+    rollouts run as one compiled vmap(scan).  Power trace: (N, T, n).
+    """
+    return jax.vmap(
+        lambda s, p, t, l: _pid_rollout_impl(s, p, t, l, tau_ms)
+    )(state, plant, targets, loads)

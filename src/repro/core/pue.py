@@ -8,8 +8,11 @@ controllability), and a free-cooling fraction ramping linearly from 0 at
 25 degC ambient to 1 at 12 degC wet-bulb.  Calibrated to the published
 Marconi100 design point: PUE = 1.20 at full load (reference ambient).
 
-All functions are jnp-vectorised over time/site so the Tier-3 selector and
-the E8 sweep evaluate the meter model in one shot.
+All functions are jnp-vectorised over time/site AND over a leading scenario
+axis: `load`, `t_amb`, and `pue_design` may each be scalars, (H,) traces,
+or vmap-traced per-scenario values, so the batched sweep engine evaluates
+the meter model for every (country x season x seed x level x design)
+combination in one compiled call.
 """
 from __future__ import annotations
 
@@ -38,9 +41,13 @@ def free_cooling_fraction(t_amb) -> jax.Array:
                     0.0, 1.0)
 
 
-def _overhead_design(pue_design: float = PUE_DESIGN) -> float:
-    """Total facility overhead per watt of IT at the design point."""
-    return pue_design - 1.0
+def _overhead_design(pue_design=PUE_DESIGN) -> jax.Array:
+    """Total facility overhead per watt of IT at the design point.
+
+    Accepts a scalar, an array, or a traced per-scenario value (the E9
+    design-sensitivity axis of the batched sweep).
+    """
+    return jnp.asarray(pue_design, jnp.float32) - 1.0
 
 
 def pue(load, t_amb, *, pue_design: float = PUE_DESIGN) -> jax.Array:

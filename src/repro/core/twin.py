@@ -12,6 +12,13 @@ Composes all three tiers over a simulated fleet at 1 Hz (Tier-2 cadence):
 Everything is one `jax.lax.scan` over seconds with vector state across
 hosts*chips, which is how the twin reaches the paper's >26 000x real-time
 (86 400 simulated seconds in a few wall-clock seconds, jitted).
+
+The scan body is pure over a :class:`TwinInputs` bundle of per-second
+traces, so a batch of scenarios (grids x seeds x seasons) replays as ONE
+jitted ``vmap(scan)`` call: prepare each scenario host-side with
+:func:`prepare_scenario`, stack with :func:`stack_scenarios`, and run
+:func:`run_twin_batch`.  `run_twin` is the single-scenario wrapper over the
+same code path.
 """
 from __future__ import annotations
 
@@ -86,10 +93,37 @@ def _host_loads(cfg: TwinConfig, key) -> jax.Array:
     return jnp.stack(cols, axis=1)  # (T, H)
 
 
-@partial(jax.jit, static_argnames=("cfg",))
-def _twin_scan(cfg: TwinConfig, loads, mu_sec, rho_sec, ffr_sec, t_amb_sec,
-               key):
+class TwinInputs(NamedTuple):
+    """Per-second traced inputs of one scenario (all precomputed host-side).
+
+    Every leaf is an array, so a list of these stacks into a leading
+    scenario axis with `stack_scenarios` and maps through `jax.vmap`.
+    """
+
+    loads: jax.Array     # (T, H) per-host demand profile
+    mu_sec: jax.Array    # (T,) Tier-3 operating fraction
+    rho_sec: jax.Array   # (T,) committed FFR band
+    ffr_sec: jax.Array   # (T,) bool FFR activation flag
+    t_amb_sec: jax.Array  # (T,) ambient degC
+    key: jax.Array       # PRNG key for plant noise
+
+
+@dataclasses.dataclass(frozen=True)
+class TwinScenario:
+    """One prepared scenario: scan inputs + the host-side context the
+    summary needs (FFR event list, hourly operating points, grid)."""
+
+    inputs: TwinInputs
+    grid: signals.GridSignals
+    events: list
+    mu_h: np.ndarray
+    rho_h: np.ndarray
+    seed: int
+
+
+def _twin_scan_impl(cfg: TwinConfig, inputs: TwinInputs):
     """The 1 Hz fused update.  All (T,)-indexed inputs precomputed."""
+    loads, mu_sec, rho_sec, ffr_sec, t_amb_sec, key = inputs
     H, C = cfg.n_hosts, cfg.chips_per_host
     design_host = C * cfg.chip_tdp
 
@@ -163,9 +197,23 @@ def _twin_scan(cfg: TwinConfig, loads, mu_sec, rho_sec, ffr_sec, t_amb_sec,
     return out
 
 
-def run_twin(cfg: TwinConfig, grid: signals.GridSignals,
-             events=None) -> tuple[TwinMetrics, dict]:
-    """24 h multiscale twin on one grid.  Returns (per-second metrics, summary)."""
+_twin_scan = partial(jax.jit, static_argnames=("cfg",))(_twin_scan_impl)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def _twin_scan_batch(cfg: TwinConfig, inputs: TwinInputs):
+    """One compiled vmap(scan) over a leading scenario axis."""
+    return jax.vmap(partial(_twin_scan_impl, cfg))(inputs)
+
+
+def prepare_scenario(cfg: TwinConfig, grid: signals.GridSignals,
+                     events=None, seed: int | None = None) -> TwinScenario:
+    """Host-side scenario prep: Tier-3 schedule, FFR events, load traces.
+
+    `seed` overrides cfg.seed so one TwinConfig can fan out over a seed
+    batch without re-hashing the dataclass.
+    """
+    seed = cfg.seed if seed is None else seed
     hours = cfg.seconds // 3600
     sel = tier3_lib.Tier3Selector(pue_aware=cfg.pue_aware,
                                   pue_design=cfg.pue_design)
@@ -174,7 +222,7 @@ def run_twin(cfg: TwinConfig, grid: signals.GridSignals,
     rho_h = np.atleast_1d(np.asarray(op.rho))
 
     if events is None:
-        gen = markets.FFRTriggerGen(events_per_day=4.0, seed=cfg.seed)
+        gen = markets.FFRTriggerGen(events_per_day=4.0, seed=seed)
         events = gen.sample_day()
     ffr = np.zeros(cfg.seconds, bool)
     for (t0, _nadir, rec) in events:
@@ -188,12 +236,26 @@ def run_twin(cfg: TwinConfig, grid: signals.GridSignals,
     t_amb_sec = jnp.asarray(grid.t_amb[hour_idx], jnp.float32)
     ffr_sec = jnp.asarray(ffr)
 
-    key = jax.random.PRNGKey(cfg.seed)
+    key = jax.random.PRNGKey(seed)
     k_load, k_scan = jax.random.split(key)
     loads = _host_loads(cfg, k_load) * mu_sec[:, None] / 0.9
-    out = _twin_scan(cfg, loads, mu_sec, rho_sec, ffr_sec, t_amb_sec, k_scan)
+    inputs = TwinInputs(loads=loads, mu_sec=mu_sec, rho_sec=rho_sec,
+                        ffr_sec=ffr_sec, t_amb_sec=t_amb_sec, key=k_scan)
+    return TwinScenario(inputs=inputs, grid=grid, events=events,
+                        mu_h=mu_h, rho_h=rho_h, seed=seed)
 
-    # ---- summary (paper Fig. 4 numbers) ------------------------------------
+
+def stack_scenarios(scenarios: list[TwinScenario]) -> TwinInputs:
+    """Stack per-scenario inputs along a new leading scenario axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs),
+                        *[s.inputs for s in scenarios])
+
+
+def summarize_twin(cfg: TwinConfig, scen: TwinScenario,
+                   out: TwinMetrics) -> dict:
+    """Paper Fig. 4 summary numbers for one scenario's metrics."""
+    hours = cfg.seconds // 3600
+    mu_h, rho_h, events, grid = scen.mu_h, scen.rho_h, scen.events, scen.grid
     warm = 60  # let RLS warm up before scoring
     err = np.asarray(out.ar4_abs_err)[warm:]
     hp = np.asarray(out.host_power)[warm:]
@@ -234,7 +296,32 @@ def run_twin(cfg: TwinConfig, grid: signals.GridSignals,
         it_energy_mwh=float(it.sum() / 3600.0 / 1e6),
         facility_energy_mwh=float(fac.sum() / 3600.0 / 1e6),
     )
-    return out, summary
+    return summary
+
+
+def run_twin(cfg: TwinConfig, grid: signals.GridSignals,
+             events=None) -> tuple[TwinMetrics, dict]:
+    """24 h multiscale twin on one grid.  Returns (per-second metrics, summary)."""
+    scen = prepare_scenario(cfg, grid, events)
+    out = _twin_scan(cfg, scen.inputs)
+    return out, summarize_twin(cfg, scen, out)
+
+
+def run_twin_batch(cfg: TwinConfig, scenarios: list[TwinScenario],
+                   ) -> tuple[TwinMetrics, list[dict]]:
+    """Replay N prepared scenarios as ONE jitted vmap(scan).
+
+    Returns (metrics with a leading (N,) scenario axis, one summary per
+    scenario).  All scenarios share `cfg` (static shapes); they may differ
+    in grid, season, seed, and FFR event draw.
+    """
+    stacked = stack_scenarios(scenarios)
+    out = _twin_scan_batch(cfg, stacked)
+    summaries = [
+        summarize_twin(cfg, scen, jax.tree.map(lambda x, i=i: x[i], out))
+        for i, scen in enumerate(scenarios)
+    ]
+    return out, summaries
 
 
 def net_co2_decomposition(cfg: TwinConfig, grid: signals.GridSignals,

@@ -1,18 +1,32 @@
 from repro.grid.signals import (
     COUNTRIES,
+    COUNTRY_ORDER,
     GridSignals,
     synthesize_ci,
     synthesize_t_amb,
     make_grid,
 )
 from repro.grid.markets import FR_PRODUCTS, FFRTriggerGen
+from repro.grid.scenarios import (
+    ScenarioBatch,
+    ScenarioSpec,
+    build_scenario_batch,
+    masked_quantile,
+    product_specs,
+)
 
 __all__ = [
     "COUNTRIES",
+    "COUNTRY_ORDER",
     "GridSignals",
     "synthesize_ci",
     "synthesize_t_amb",
     "make_grid",
     "FR_PRODUCTS",
     "FFRTriggerGen",
+    "ScenarioBatch",
+    "ScenarioSpec",
+    "build_scenario_batch",
+    "masked_quantile",
+    "product_specs",
 ]

@@ -1,0 +1,158 @@
+"""Scenario-batch builder: the grid-data side of the batched sweep engine.
+
+A *scenario* is one (country, season, seed, MW level, PUE design) replay
+configuration together with its synthesised hourly CI / ambient traces.  A
+:class:`ScenarioBatch` stacks N scenarios into padded device arrays with a
+leading scenario axis so the whole sweep runs as ONE jitted ``vmap(scan)``
+call (see ``benchmarks/e8_multicountry.py`` and
+``repro.core.dispatch.replay_schedule``) instead of a Python loop of
+independent replays.
+
+Ragged horizons are supported: traces shorter than the longest one in the
+batch are right-padded and masked out (``mask`` is 1.0 on valid hours), so
+"as many scenarios as you can imagine" -- thousands of grid/season/seed
+combos with mixed horizons -- stack into a single rectangular batch.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.core.pue as pue_lib
+from repro.grid.signals import COUNTRY_ORDER, synthesize_ci, synthesize_t_amb
+
+DEFAULT_HORIZON_H = 28 * 24
+# value padded into t_amb beyond a scenario's horizon: the calibration
+# reference ambient, guaranteed in-range for every downstream PUE call.
+_PAD_T_AMB = pue_lib.T_REF
+
+
+@dataclass(frozen=True)
+class ScenarioSpec:
+    """Host-side description of one replay scenario."""
+
+    country: str
+    seed: int = 0
+    start_day: int = 15          # day-of-year: season selector
+    mw: float = 10.0             # site IT design power
+    pue_design: float = pue_lib.PUE_DESIGN
+    horizon_h: int = DEFAULT_HORIZON_H
+
+
+def product_specs(countries: Sequence[str] = tuple(COUNTRY_ORDER),
+                  seeds: Sequence[int] = (0,),
+                  start_days: Sequence[int] = (15,),
+                  mw_levels: Sequence[float] = (10.0,),
+                  pue_designs: Sequence[float] = (pue_lib.PUE_DESIGN,),
+                  horizon_h: int = DEFAULT_HORIZON_H) -> list[ScenarioSpec]:
+    """Cartesian (country x season x seed x level x design) scenario grid."""
+    return [
+        ScenarioSpec(country=c, seed=s, start_day=d, mw=m, pue_design=pd,
+                     horizon_h=horizon_h)
+        for c, d, s, m, pd in itertools.product(
+            countries, start_days, seeds, mw_levels, pue_designs)
+    ]
+
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class ScenarioBatch:
+    """N scenarios as padded device arrays (leading axis = scenario)."""
+
+    country_idx: jax.Array   # (N,) int32 index into COUNTRY_ORDER
+    seed: jax.Array          # (N,) int32
+    start_day: jax.Array     # (N,) int32
+    mw: jax.Array            # (N,) float32
+    pue_design: jax.Array    # (N,) float32
+    hours: jax.Array         # (N,) int32 valid trace length
+    ci: jax.Array            # (N, H_max) float32, right-padded with 0
+    t_amb: jax.Array         # (N, H_max) float32, right-padded with T_REF
+    mask: jax.Array          # (N, H_max) float32, 1.0 on valid hours
+
+    @property
+    def n(self) -> int:
+        return int(self.ci.shape[0])
+
+    @property
+    def h_max(self) -> int:
+        return int(self.ci.shape[1])
+
+    def __len__(self) -> int:
+        return self.n
+
+    def spec(self, i: int) -> ScenarioSpec:
+        return ScenarioSpec(
+            country=COUNTRY_ORDER[int(self.country_idx[i])],
+            seed=int(self.seed[i]),
+            start_day=int(self.start_day[i]),
+            mw=float(self.mw[i]),
+            pue_design=float(self.pue_design[i]),
+            horizon_h=int(self.hours[i]),
+        )
+
+    def select(self, i: int) -> dict:
+        """One scenario's unpadded traces as host numpy (loop/parity path)."""
+        h = int(self.hours[i])
+        return dict(
+            spec=self.spec(i),
+            ci=np.asarray(self.ci[i, :h]),
+            t_amb=np.asarray(self.t_amb[i, :h]),
+        )
+
+
+def build_scenario_batch(specs: Sequence[ScenarioSpec]) -> ScenarioBatch:
+    """Synthesize every spec's traces and stack them into one padded batch."""
+    if not specs:
+        raise ValueError("empty scenario list")
+    h_max = max(s.horizon_h for s in specs)
+    n = len(specs)
+    ci = np.zeros((n, h_max), np.float32)
+    t_amb = np.full((n, h_max), _PAD_T_AMB, np.float32)
+    mask = np.zeros((n, h_max), np.float32)
+    for i, s in enumerate(specs):
+        h = s.horizon_h
+        ci[i, :h] = synthesize_ci(s.country, h, s.seed, s.start_day)
+        t_amb[i, :h] = synthesize_t_amb(s.country, h, s.seed, s.start_day)
+        mask[i, :h] = 1.0
+    return ScenarioBatch(
+        country_idx=jnp.asarray(
+            [COUNTRY_ORDER.index(s.country) for s in specs], jnp.int32),
+        seed=jnp.asarray([s.seed for s in specs], jnp.int32),
+        start_day=jnp.asarray([s.start_day for s in specs], jnp.int32),
+        mw=jnp.asarray([s.mw for s in specs], jnp.float32),
+        pue_design=jnp.asarray([s.pue_design for s in specs], jnp.float32),
+        hours=jnp.asarray([s.horizon_h for s in specs], jnp.int32),
+        ci=jnp.asarray(ci),
+        t_amb=jnp.asarray(t_amb),
+        mask=jnp.asarray(mask),
+    )
+
+
+def masked_quantile_sorted(xs: jax.Array, n_valid, q: float) -> jax.Array:
+    """Quantile from an ascending-sorted array whose first ``n_valid``
+    entries are the valid ones (invalid sorted to +inf).  Exists so a sort
+    already paid for elsewhere (e.g. schedule thresholds over the same
+    trace) is reused instead of repeated -- under vmap over hundreds of
+    scenarios the sorts are the sweep's dominant cost.
+    """
+    n_valid = jnp.asarray(n_valid)
+    pos = q / 100.0 * (n_valid.astype(jnp.float32) - 1.0)
+    i0 = jnp.clip(jnp.floor(pos).astype(jnp.int32), 0, xs.shape[-1] - 1)
+    i1 = jnp.clip(i0 + 1, 0, n_valid.astype(jnp.int32) - 1)
+    w = pos - i0.astype(jnp.float32)
+    return xs[i0] * (1.0 - w) + xs[i1] * w
+
+
+def masked_quantile(x: jax.Array, mask: jax.Array, q: float) -> jax.Array:
+    """Quantile of the masked entries of ``x`` (linear interpolation).
+
+    jnp.percentile has no `where=`; this sorts invalid entries to +inf and
+    interpolates at q * (n_valid - 1).  Pure jnp, vmappable.
+    """
+    xs = jnp.sort(jnp.where(mask > 0, x, jnp.inf))
+    return masked_quantile_sorted(xs, jnp.sum(mask > 0), q)

@@ -15,6 +15,7 @@ lifecycle factors); offline, `synthesize_ci` is the drop-in stand-in.
 """
 from __future__ import annotations
 
+import zlib
 from dataclasses import dataclass
 
 import numpy as np
@@ -40,6 +41,16 @@ COUNTRIES: dict[str, dict] = {
                t_summer=19.0, ci_vol=0.45),
 }
 COUNTRY_ORDER = ["SE", "CH", "FR", "IT", "DE", "PL"]  # by mean CI
+
+
+def _country_seed(country: str, seed: int) -> int:
+    """Deterministic per-(country, seed) rng seed.
+
+    Python's built-in `hash(str)` is randomised per process (PYTHONHASHSEED),
+    which made every trace -- and every benchmark number derived from it --
+    change between runs.  crc32 is stable everywhere.
+    """
+    return seed * 101 + zlib.crc32(country.encode()) % 2**16
 
 
 def _wind_events(n_hours: int, rng: np.random.Generator,
@@ -70,7 +81,7 @@ def synthesize_ci(country: str, n_hours: int, seed: int = 0,
                   start_day_of_year: int = 15) -> np.ndarray:
     """Hourly carbon intensity (gCO2/kWh) for `country`."""
     c = COUNTRIES[country]
-    rng = np.random.default_rng(seed * 101 + hash(country) % 2**16)
+    rng = np.random.default_rng(_country_seed(country, seed))
     hours = np.arange(n_hours, dtype=np.float64) + 24.0 * start_day_of_year
     vol = c["ci_vol"]
     env = 1.0 + vol * (_diurnal(hours, c["solar"]) - 1.0)
@@ -90,7 +101,7 @@ def synthesize_t_amb(country: str, n_hours: int, seed: int = 0,
     fronts coincide with low CI -- the free-cooling alignment effect.
     """
     c = COUNTRIES[country]
-    rng = np.random.default_rng(seed * 101 + hash(country) % 2**16)
+    rng = np.random.default_rng(_country_seed(country, seed))
     hours = np.arange(n_hours, dtype=np.float64)
     doy = (float(start_day_of_year) + hours / 24.0) % 365.0
     season = 0.5 - 0.5 * np.cos(2 * np.pi * (doy - 15.0) / 365.0)  # 0 winter

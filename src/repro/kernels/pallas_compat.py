@@ -1,0 +1,23 @@
+"""JAX version-compat shims for the Pallas TPU API.
+
+The Pallas TPU compiler-params dataclass was renamed across JAX releases:
+older releases (including the 0.4.x line this container ships) expose
+``pltpu.TPUCompilerParams`` while newer ones renamed it to
+``pltpu.CompilerParams``.  Kernels import :data:`CompilerParams` from here
+so that both spellings of the runtime work unchanged.
+
+Policy (documented in README.md): every JAX-version branch lives in a
+``*_compat`` module next to its users, resolves at import time, and prefers
+the NEW public name with a fallback to the old one -- never the reverse --
+so upgrading JAX silently switches to the supported path.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+if hasattr(pltpu, "CompilerParams"):           # JAX >= 0.5-era spelling
+    CompilerParams = pltpu.CompilerParams
+else:                                          # JAX 0.4.x spelling
+    CompilerParams = pltpu.TPUCompilerParams
+
+__all__ = ["CompilerParams"]

@@ -1,0 +1,89 @@
+"""Property-test shim: real hypothesis when installed, fixed examples otherwise.
+
+The tier-1 suite must collect and pass on a bare container (no ``pip
+install``), but `hypothesis` adds real value when present (it is declared in
+``requirements-dev.txt``).  Import ``given``/``settings``/``st`` from this
+module instead of ``hypothesis``:
+
+  * with hypothesis installed, these are the genuine objects — full
+    randomised property testing;
+  * without it, ``st.floats``/``st.integers`` describe fixed example grids
+    (bounds, midpoint, near-bound points) and ``given`` runs the test once
+    per combination, so every property still gets exercised on
+    deterministic representative inputs instead of being skipped.
+
+Only the strategy surface this repo actually uses is shimmed.
+"""
+from __future__ import annotations
+
+import itertools
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # minimal fixed-example fallback
+    HAVE_HYPOTHESIS = False
+
+    _MAX_COMBINATIONS = 25
+
+    class _FixedStrategy:
+        """A named bundle of representative example values."""
+
+        def __init__(self, examples):
+            self.examples = list(examples)
+
+    class _Strategies:
+        @staticmethod
+        def floats(min_value, max_value, **_kw):
+            lo, hi = float(min_value), float(max_value)
+            mid = 0.5 * (lo + hi)
+            span = hi - lo
+            return _FixedStrategy(
+                dict.fromkeys([lo, lo + 0.07 * span, mid, hi - 0.03 * span,
+                               hi])
+            )
+
+        @staticmethod
+        def integers(min_value, max_value, **_kw):
+            lo, hi = int(min_value), int(max_value)
+            return _FixedStrategy(
+                dict.fromkeys([lo, (lo + hi) // 2, max(hi - 1, lo), hi])
+            )
+
+    st = _Strategies()
+
+    def settings(*_a, **_kw):
+        def deco(fn):
+            return fn
+        return deco
+
+    def given(*arg_strategies, **kw_strategies):
+        """Run the test once per example combination (cartesian, capped)."""
+
+        def deco(fn):
+            # NOT functools.wraps: pytest must see a zero-arg signature, and
+            # wraps' __wrapped__ would re-expose the original parameters as
+            # fixture requests.
+            def wrapper():
+                names = list(kw_strategies)
+                strategies = list(arg_strategies) + [
+                    kw_strategies[n] for n in names
+                ]
+                combos = itertools.islice(
+                    itertools.product(*(s.examples for s in strategies)),
+                    _MAX_COMBINATIONS,
+                )
+                n_pos = len(arg_strategies)
+                for combo in combos:
+                    fn(*combo[:n_pos],
+                       **dict(zip(names, combo[n_pos:])))
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+
+        return deco
+
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]

@@ -3,4 +3,8 @@ import sys
 
 # Tests run on the single real CPU device (the dry-run forces 512 devices
 # in its own process only -- never here).
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+_root = os.path.join(os.path.dirname(__file__), "..")
+sys.path.insert(0, os.path.join(_root, "src"))
+# repo root, so the sweep-engine tests can import the benchmarks package
+# (benchmarks/e8_multicountry.py hosts the vmapped E8 sweep under test)
+sys.path.insert(0, _root)

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import ar4
 
@@ -25,6 +25,7 @@ def test_rls_learns_ar_process():
     assert tail < 2.5 * sig * np.sqrt(2 / np.pi)
 
 
+@pytest.mark.slow
 def test_rls_covariance_bounded():
     st_ = ar4.init_rls(1)
     for t in range(5000):

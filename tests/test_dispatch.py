@@ -1,7 +1,7 @@
 """Algorithm 1 dispatch invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.dispatch import (
     BETA_CUTOFF,

@@ -64,6 +64,7 @@ def test_smoke_decode_step(arch):
     assert int(cache["cur"]) == 4
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["smollm-135m", "qwen2-1.5b", "mamba2-1.3b"])
 def test_decode_matches_forward(arch):
     """Teacher-forced decode logits == full forward logits (causality +
@@ -85,6 +86,7 @@ def test_decode_matches_forward(arch):
                                atol=2e-3, rtol=2e-3)
 
 
+@pytest.mark.slow
 def test_sliding_window_decode_ring_buffer():
     """SWA ring cache: decode past the window stays finite and causal."""
     cfg = get_arch("mixtral-8x22b").reduced()

@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import pid, plant
 
@@ -69,3 +69,27 @@ def test_pid_tracks_bursty_load():
     _, _, trace = pid.pid_rollout(state, pl, targets, loads, tau_ms=9.7)
     # during ON phases power approaches min(demand, target)
     assert float(jnp.max(trace)) <= 260.0
+
+
+def test_pid_rollout_batch_matches_serial():
+    """vmapped closed-loop rollout == per-scenario serial rollouts."""
+    n_chips, n_ticks = 2, 120
+    scenarios = [(280.0, 200.0, 6.0, 0.97), (150.0, 260.0, 6.0, 0.6),
+                 (250.0, 120.0, 6.0, 0.9)]
+    states, plants, targets, loads, serial = [], [], [], [], []
+    for p0, tgt, tau, ld in scenarios:
+        st0 = pid.init_pid(n_chips, p0)
+        pl0 = dataclasses.replace(plant.init_plant(n_chips, cap=300.0),
+                                  power=jnp.full((n_chips,), p0))
+        tg = jnp.full((n_ticks, n_chips), tgt)
+        lo = jnp.full((n_ticks, n_chips), ld)
+        states.append(st0); plants.append(pl0)
+        targets.append(tg); loads.append(lo)
+        serial.append(pid.pid_rollout(st0, pl0, tg, lo, tau_ms=tau)[2])
+    stack = lambda xs: jax.tree.map(lambda *a: jnp.stack(a), *xs)
+    _, _, traces = pid.pid_rollout_batch(
+        stack(states), stack(plants), jnp.stack(targets), jnp.stack(loads),
+        tau_ms=6.0)
+    for i, ref in enumerate(serial):
+        np.testing.assert_allclose(np.asarray(traces[i]), np.asarray(ref),
+                                   atol=1e-4, err_msg=f"scenario {i}")

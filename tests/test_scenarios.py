@@ -1,0 +1,177 @@
+"""Batched scenario-sweep engine: vmap-vs-loop parity + padding invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core.dispatch as dispatch
+import repro.core.twin as twin_lib
+from repro.grid import signals
+from repro.grid.scenarios import (
+    ScenarioSpec,
+    build_scenario_batch,
+    masked_quantile,
+    product_specs,
+)
+
+from benchmarks import e8_multicountry as e8
+
+
+# ---------------------------------------------------------------------------
+# ScenarioBatch construction + ragged padding
+# ---------------------------------------------------------------------------
+
+
+def test_batch_shapes_and_ragged_padding():
+    specs = [
+        ScenarioSpec("DE", seed=0, horizon_h=96),
+        ScenarioSpec("SE", seed=1, horizon_h=48, mw=1.0),
+        ScenarioSpec("PL", seed=2, horizon_h=72, pue_design=1.3),
+    ]
+    batch = build_scenario_batch(specs)
+    assert batch.n == 3 and batch.h_max == 96
+    assert batch.ci.shape == batch.t_amb.shape == batch.mask.shape == (3, 96)
+    np.testing.assert_array_equal(np.asarray(batch.hours), [96, 48, 72])
+    # mask marks exactly the valid prefix
+    m = np.asarray(batch.mask)
+    for i, h in enumerate((96, 48, 72)):
+        assert m[i, :h].all() and not m[i, h:].any()
+    # padded ci is zero; padded t_amb is finite and in the PUE model's range
+    ci = np.asarray(batch.ci)
+    assert (ci[1, 48:] == 0).all() and (ci[1, :48] > 0).all()
+    assert np.isfinite(np.asarray(batch.t_amb)).all()
+
+
+def test_batch_select_roundtrip():
+    specs = [ScenarioSpec("IT", seed=3, start_day=200, horizon_h=60,
+                          mw=50.0, pue_design=1.1),
+             ScenarioSpec("FR", seed=4, horizon_h=90)]
+    batch = build_scenario_batch(specs)
+    for i, spec in enumerate(specs):
+        sel = batch.select(i)
+        got = sel["spec"]
+        assert (got.country, got.seed, got.start_day, got.horizon_h) == (
+            spec.country, spec.seed, spec.start_day, spec.horizon_h)
+        # mw / pue_design survive the float32 device roundtrip approximately
+        assert got.mw == pytest.approx(spec.mw, rel=1e-6)
+        assert got.pue_design == pytest.approx(spec.pue_design, rel=1e-6)
+        np.testing.assert_allclose(
+            sel["ci"],
+            signals.synthesize_ci(spec.country, spec.horizon_h, spec.seed,
+                                  spec.start_day),
+            rtol=1e-6)
+        assert len(sel["ci"]) == spec.horizon_h
+
+
+def test_product_specs_cartesian():
+    specs = product_specs(countries=("SE", "DE"), seeds=(0, 1),
+                          start_days=(15, 196), mw_levels=(1.0,),
+                          horizon_h=24)
+    assert len(specs) == 8
+    assert len(set(specs)) == 8
+
+
+def test_masked_quantile_matches_numpy():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=64).astype(np.float32)
+    mask = (np.arange(64) < 40).astype(np.float32)
+    for q in (0.0, 25.0, 50.0, 90.0, 100.0):
+        ref = np.percentile(x[:40], q)
+        got = float(masked_quantile(jnp.asarray(x), jnp.asarray(mask), q))
+        assert got == pytest.approx(ref, abs=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# replay_schedule: padding must be inert; totals must match a trimmed replay
+# ---------------------------------------------------------------------------
+
+
+def test_replay_schedule_padding_inert():
+    batch = build_scenario_batch([ScenarioSpec("DE", horizon_h=48),
+                                  ScenarioSpec("DE", horizon_h=30)])
+    mu = jnp.where(batch.mask > 0, 0.7, 0.0)
+    tot_pad = dispatch.replay_schedule(
+        mu[1], batch.ci[1], batch.t_amb[1], batch.mask[1], pue_design=1.2)
+    tot_trim = dispatch.replay_schedule(
+        mu[1, :30], batch.ci[1, :30], batch.t_amb[1, :30],
+        batch.mask[1, :30], pue_design=1.2)
+    for k in tot_pad:
+        assert float(tot_pad[k]) == pytest.approx(float(tot_trim[k]),
+                                                  rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# E8 sweep: the vmapped batch must match the per-scenario loop element-wise
+# ---------------------------------------------------------------------------
+
+
+def test_e8_sweep_vmap_matches_loop():
+    specs = product_specs(countries=("SE", "DE", "PL"), seeds=(0, 1),
+                          start_days=(105,), mw_levels=(1.0, 50.0),
+                          horizon_h=7 * 24)
+    batch = build_scenario_batch(specs)
+    noise = e8.noise_for(batch)
+    vm = e8.sweep_batched(batch, noise)
+    loop = e8.sweep_loop(batch, noise)
+    for k in e8.METRIC_KEYS:
+        np.testing.assert_allclose(np.asarray(vm[k]), np.asarray(loop[k]),
+                                   atol=1e-4, err_msg=k)
+    # sanity: reductions vs the flat baseline are finite and bounded
+    red = np.asarray(vm["facility_reduction_aware_pp"])
+    assert np.isfinite(red).all() and (np.abs(red) < 50).all()
+
+
+def test_e8_sweep_ragged_batch_runs():
+    specs = [ScenarioSpec("SE", horizon_h=5 * 24),
+             ScenarioSpec("DE", horizon_h=7 * 24)]
+    batch = build_scenario_batch(specs)
+    noise = e8.noise_for(batch)
+    vm = e8.sweep_batched(batch, noise)
+    loop = e8.sweep_loop(batch, noise)
+    for k in e8.METRIC_KEYS:
+        np.testing.assert_allclose(np.asarray(vm[k]), np.asarray(loop[k]),
+                                   atol=1e-4, err_msg=k)
+
+
+# ---------------------------------------------------------------------------
+# Twin: batched vmap(scan) replay == per-scenario serial scans
+# ---------------------------------------------------------------------------
+
+
+def _twin_parity(cfg, grids_seeds):
+    scens = [twin_lib.prepare_scenario(cfg, g, seed=s)
+             for g, s in grids_seeds]
+    bout, bsums = twin_lib.run_twin_batch(cfg, scens)
+    for i, (g, s) in enumerate(grids_seeds):
+        scen = twin_lib.prepare_scenario(cfg, g, seed=s)
+        out = twin_lib._twin_scan(cfg, scen.inputs)
+        for f in twin_lib.TwinMetrics._fields:
+            a = np.asarray(getattr(out, f), np.float32)
+            b = np.asarray(getattr(bout, f))[i]
+            np.testing.assert_allclose(a, b, atol=2e-3, rtol=1e-4,
+                                       err_msg=f"scenario {i} field {f}")
+        ssum = twin_lib.summarize_twin(cfg, scen, out)
+        for k, v in ssum.items():
+            bv = bsums[i][k]
+            if np.isnan(v):
+                assert np.isnan(bv)
+            else:
+                assert bv == pytest.approx(v, rel=1e-5, abs=1e-6), (i, k)
+
+
+def test_twin_batch_matches_serial_loop():
+    cfg = twin_lib.TwinConfig(n_hosts=4, chips_per_host=2, seconds=3600,
+                              seed=0)
+    grids = [(signals.make_grid("DE", 24, seed=0), 0),
+             (signals.make_grid("SE", 24, seed=1), 1),
+             (signals.make_grid("PL", 24, seed=2), 2)]
+    _twin_parity(cfg, grids)
+
+
+@pytest.mark.slow
+def test_twin_batch_matches_serial_loop_full_day():
+    cfg = twin_lib.TwinConfig(n_hosts=24, chips_per_host=3, seconds=21_600,
+                              seed=0)
+    grids = [(signals.make_grid(c, 48, seed=i), i)
+             for i, c in enumerate(("DE", "CH", "IT", "SE"))]
+    _twin_parity(cfg, grids)

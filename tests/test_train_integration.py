@@ -22,6 +22,7 @@ def _trainer(steps=12, **kw):
                    TrainerConfig(steps=steps, log_every=0, **kw))
 
 
+@pytest.mark.slow
 def test_loss_decreases():
     t = _trainer(steps=25)
     out = t.train()
@@ -31,6 +32,7 @@ def test_loss_decreases():
     assert all(np.isfinite(l) for l in losses)
 
 
+@pytest.mark.slow
 def test_checkpoint_restart_continues(tmp_path):
     t1 = _trainer(steps=10, ckpt_dir=str(tmp_path), ckpt_every=5)
     out1 = t1.train()
@@ -73,6 +75,7 @@ def test_data_pipeline_seekable():
     assert int(a.max()) < 100
 
 
+@pytest.mark.slow
 def test_elastic_resize_restores(tmp_path):
     t1 = _trainer(steps=6, ckpt_dir=str(tmp_path), ckpt_every=3)
     t1.train()
