@@ -1,0 +1,285 @@
+"""E9: batched frequency-reserve replay & settlement (the seconds tier).
+
+Replays >= 200 scenario-days of synthetic 1 Hz grid frequency against the
+plant + PUE models and settles each scenario's committed reserve band:
+
+  * frequency synthesis: ``repro.grid.frequency`` (one vmapped jit),
+  * replay + verification + settlement: ``repro.core.reserve`` -- the
+    whole (country x seed x product x rho x event-draw) batch as ONE
+    jitted ``vmap(scan)`` over seconds (`e9_sweep`),
+  * the energy side: the SAME call threads ``reserve_rho`` into the E8
+    machinery -- committing a band rho floors the hourly schedule at
+    ``rho + MIN_RESIDUAL_LOAD`` (the shed must stay physical), and
+    ``replay_schedule`` integrates the facility energy/carbon cost of
+    that withheld band against the rho = 0 schedule.
+
+Headline contrasts:
+  * scenarios/sec of the vmapped scan vs the per-event Python reference
+    loop (`reserve_replay_reference`), with exact verdict parity,
+  * PUE-aware vs PUE-blind meter delivery: the blind site under-delivers
+    at the meter (paper: 4-7 pp) and forfeits reserve revenue,
+  * per-rho settlement: capacity revenue vs penalties vs the E8-side
+    carbon cost of withholding the band.
+"""
+from __future__ import annotations
+
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, save_json
+import repro.core.dispatch as dispatch
+import repro.core.pue as pue_lib
+import repro.core.reserve as reserve
+import repro.core.tier3 as tier3_lib
+from repro.grid import frequency
+from repro.grid.scenarios import build_scenario_batch, product_specs
+from repro.grid.signals import COUNTRY_ORDER
+
+HORIZON_H = 24              # one scenario = one replayed day
+MU_HI = 0.9
+LO = 0.25
+DEMAND = 0.6                # mean utilisation the job trace requires
+EVENTS_PER_DAY = 4.0
+RHO_LEVELS = (0.0, 0.1, 0.2, 0.3)
+PRODUCTS = ("FFR", "FCR-D")
+E_MAX = 24                  # Poisson(4)/day: P(n > 24) ~ 1e-12
+
+
+def build_e9_batch(fast: bool = False):
+    """(specs, ScenarioBatch): 288 scenario-days full, 6 quarter-days fast."""
+    if fast:
+        specs = product_specs(countries=("SE", "DE", "PL"), seeds=(0,),
+                              horizon_h=6, products=("FFR",),
+                              reserve_rhos=(0.0, 0.2), event_seeds=(0,))
+    else:
+        specs = product_specs(countries=tuple(COUNTRY_ORDER),
+                              seeds=(0, 1, 2), horizon_h=HORIZON_H,
+                              products=PRODUCTS, reserve_rhos=RHO_LEVELS,
+                              event_seeds=(0, 1))
+    return specs, build_scenario_batch(specs)
+
+
+def freq_seeds(batch) -> jnp.ndarray:
+    """Deterministic per-scenario frequency-synthesis seed: scenarios that
+    differ only in country/rho draw the same grid-event day.  Scenarios
+    differing in product share event *times* but not depths (the nadir
+    window is product-specific), so cross-product settlement rows compare
+    product rules on similar, not identical, traces."""
+    return (jnp.asarray(batch.event_seed, jnp.uint32) * 100_003
+            + jnp.asarray(batch.seed, jnp.uint32))
+
+
+def _mu_schedule(ci, t_amb, mask, rho, pue_design):
+    """Hourly schedule with the reserve band threaded into the E8 path.
+
+    Withholding rho means the fleet must keep ``rho + MIN_RESIDUAL_LOAD``
+    running at all times (the committed shed has to stay physical), so the
+    dirty-hour shed floor rises with rho -- that floor is the energy-side
+    cost of the commitment.  Total scheduled work is held constant across
+    rho levels via the n_hi ranking, so the carbon delta is pure cost.
+    """
+    hv = jnp.sum(mask)
+    lo = jnp.maximum(LO, rho + tier3_lib.MIN_RESIDUAL_LOAD)
+    n_hi = jnp.clip(jnp.round((DEMAND * hv - lo * hv) / (MU_HI - lo)),
+                    0.0, hv)
+    sigma = ci * pue_lib.pue(MU_HI, t_amb, pue_design=pue_design)
+    thr = dispatch.signal_thresholds(sigma, mask, n_hi[None])[0]
+    return dispatch.schedule_from_threshold(sigma, thr, lo, mask, MU_HI)
+
+
+@partial(jax.jit, static_argnames=("pue_aware",))
+def e9_sweep(batch, freq, *, pue_aware: bool = True) -> dict:
+    """The full E9 sweep as ONE compiled ``vmap(scan)`` over the batch:
+    schedule construction, E8 energy/carbon replay, 1 Hz reserve replay
+    with per-event verdicts, and settlement -- dict of (N,)/(N, E) leaves.
+    """
+
+    def one(ci, t_amb, mask, freq_i, pidx, rho, pue_design, mw, hours):
+        mu_h = _mu_schedule(ci, t_amb, mask, rho, pue_design)
+        energy = dispatch.replay_schedule(mu_h, ci, t_amb, mask,
+                                          pue_design=pue_design, design_w=mw)
+        res = reserve.reserve_replay(freq_i, mu_h, t_amb, hours * 3600,
+                                     pidx, rho, mw, pue_design,
+                                     pue_aware=pue_aware, e_max=E_MAX)
+        settle = reserve.settle_reserve(res["events"], pidx, rho, mw,
+                                        pue_design, hours)
+        return dict(
+            mu_h=mu_h,
+            events=res["events"],
+            active_s=res["active_s"],
+            shed_it_mwh=res["shed_it_mwh"],
+            it_mwh=energy["it"],
+            fac_mwh=energy["fac"],
+            co2_t=energy["co2"] / 1000.0,
+            co2_it_t=energy["co2_it"] / 1000.0,
+            **settle,
+        )
+
+    return jax.vmap(one)(batch.ci, batch.t_amb, batch.mask, freq,
+                         batch.product_idx, batch.reserve_rho,
+                         batch.pue_design, batch.mw, batch.hours)
+
+
+def reference_loop(batch, freq_np, mu_np, *, pue_aware: bool = True) -> list:
+    """Per-event Python reference replay of every scenario (the speed
+    baseline; does strictly less work than `e9_sweep` -- no energy
+    integration or settlement -- so the reported speedup is conservative)."""
+    hours = np.asarray(batch.hours)
+    return [
+        reserve.reserve_replay_reference(
+            freq_np[i], mu_np[i], np.asarray(batch.t_amb)[i],
+            int(hours[i]) * 3600, int(batch.product_idx[i]),
+            float(batch.reserve_rho[i]), float(batch.mw[i]),
+            float(batch.pue_design[i]), pue_aware=pue_aware, e_max=E_MAX)
+        for i in range(batch.n)
+    ]
+
+
+def verdict_parity(out: dict, refs: list) -> dict:
+    """Exact match on detection/verdicts, max abs err on float fields."""
+    exact, max_err = True, 0.0
+    ev = out["events"]
+    for i, r in enumerate(refs):
+        rev = r["events"]
+        for field in ("t_event_s", "budget_ok", "sustain_ok",
+                      "delivered_ok", "compliant", "valid"):
+            exact &= bool(np.array_equal(np.asarray(getattr(ev, field))[i],
+                                         np.asarray(getattr(rev, field))))
+        exact &= int(out["n_events"][i]) == r["n_events"]
+        exact &= int(out["active_s"][i]) == r["active_s"]
+        for field in ("t_full_ms", "sustain_s", "delivered_mw",
+                      "delivered_frac"):
+            max_err = max(max_err, float(np.max(np.abs(
+                np.asarray(getattr(ev, field))[i]
+                - np.asarray(getattr(rev, field))))))
+        max_err = max(max_err, abs(float(out["shed_it_mwh"][i])
+                                   - float(r["shed_it_mwh"])))
+    return dict(verdicts_exact=exact, float_max_abs_err=max_err)
+
+
+def run(fast: bool = False, reps: int = 2) -> dict:
+    specs, batch = build_e9_batch(fast)
+    n_seconds = int(batch.h_max) * 3600
+    # fast mode replays 6 h slices; raise the rate so the smoke run still
+    # detects and settles real events
+    rate = 24.0 if fast else EVENTS_PER_DAY
+    freq, _events = frequency.synthesize_frequency_batch(
+        freq_seeds(batch), batch.product_idx, n_seconds=n_seconds,
+        events_per_day=rate, max_events=E_MAX)
+    scenario_days = batch.n * int(batch.h_max) / 24.0
+    emit("e9.n_scenarios", batch.n, "one jitted vmap(scan) over all")
+    emit("e9.scenario_days", round(scenario_days, 2),
+         "days of 1 Hz frequency replayed per call")
+
+    # -- the one compiled call, aware + blind arms -------------------------
+    out = jax.tree.map(np.asarray, e9_sweep(batch, freq, pue_aware=True))
+    blind = jax.tree.map(np.asarray, e9_sweep(batch, freq, pue_aware=False))
+
+    # -- parity + throughput vs the per-event Python reference -------------
+    freq_np, mu_np = np.asarray(freq), out["mu_h"]
+    refs = reference_loop(batch, freq_np, mu_np)
+    par = verdict_parity(out, refs)
+    emit("e9.verdicts_exact", int(par["verdicts_exact"]),
+         "scan vs per-event reference, pinned seeds")
+    emit("e9.float_parity_max_abs_err", f"{par['float_max_abs_err']:.2e}",
+         "delivery time / sustain / meter MW")
+
+    def timed(fn, leaf):
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            r = fn()
+            jax.block_until_ready(leaf(r))
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    t_vmap = timed(lambda: e9_sweep(batch, freq, pue_aware=True),
+                   lambda r: r["net_eur"])
+    t_loop = timed(lambda: reference_loop(batch, freq_np, mu_np),
+                   lambda r: r)
+    emit("e9.vmap_scen_per_s", round(batch.n / t_vmap, 1),
+         "one jitted vmap(scan), incl. energy replay + settlement")
+    emit("e9.loop_scen_per_s", round(batch.n / t_loop, 1),
+         "per-event python reference loop (replay only)")
+    emit("e9.speedup_x", round(t_loop / t_vmap, 1), "")
+
+    # -- compliance: the PUE-aware meter correction is the revenue ---------
+    committed = np.asarray(batch.reserve_rho) > 0
+    ev_a, ev_b = out["events"], blind["events"]
+    va = np.asarray(ev_a.valid) & committed[:, None]
+    vb = np.asarray(ev_b.valid) & committed[:, None]
+    if va.any():
+        emit("e9.delivered_frac.aware",
+             round(float(np.mean(np.asarray(ev_a.delivered_frac)[va])), 4),
+             "meter-delivered / committed, mean over events")
+        emit("e9.delivered_frac.blind",
+             round(float(np.mean(np.asarray(ev_b.delivered_frac)[vb])), 4),
+             "paper: 4-7 pp under-delivery without the PUE term")
+        emit("e9.compliance.aware",
+             round(float(np.sum(np.asarray(ev_a.compliant)[va]) / va.sum()),
+                   3), "")
+        emit("e9.compliance.blind",
+             round(float(np.sum(np.asarray(ev_b.compliant)[vb]) / vb.sum()),
+                   3), "")
+
+    # -- per-(product, rho) settlement + the E8-side cost of the band ------
+    # match each committed scenario to its rho = 0 twin for the carbon delta
+    base_idx = {}
+    for i, s in enumerate(specs):
+        if s.reserve_rho == 0.0:
+            base_idx[(s.country, s.seed, s.start_day, s.product,
+                      s.event_seed)] = i
+    rows = []
+    for i, s in enumerate(specs):
+        j = base_idx.get((s.country, s.seed, s.start_day, s.product,
+                          s.event_seed))
+        rows.append(dict(
+            country=s.country, product=s.product, rho=s.reserve_rho,
+            capacity_eur=float(out["capacity_eur"][i]),
+            penalty_eur=float(out["penalty_eur"][i]),
+            net_eur=float(out["net_eur"][i]),
+            penalty_blind_eur=float(blind["penalty_eur"][i]),
+            n_events=int(out["n_events"][i]),
+            n_compliant=int(out["n_compliant"][i]),
+            co2_t=float(out["co2_t"][i]),
+            it_mwh=float(out["it_mwh"][i]),
+            # board-side carbon delta vs the rho = 0 twin: the schedule
+            # freedom the lo-floor costs (work shifted out of green hours)
+            withhold_co2_t=(float(out["co2_it_t"][i] - out["co2_it_t"][j])
+                            if j is not None else 0.0),
+            withhold_fac_mwh=(float(out["fac_mwh"][i] - out["fac_mwh"][j])
+                              if j is not None else 0.0),
+        ))
+    for prod in sorted({r["product"] for r in rows}):
+        for rho in sorted({r["rho"] for r in rows}):
+            if rho == 0.0:
+                continue
+            sel = [r for r in rows if r["product"] == prod
+                   and r["rho"] == rho]
+            if not sel:
+                continue
+            tag = f"e9.{prod}.rho_{rho:.2f}"
+            emit(f"{tag}.net_eur_day",
+                 round(float(np.mean([r["net_eur"] for r in sel])), 1),
+                 "capacity revenue - penalties, mean/scenario-day")
+            emit(f"{tag}.penalty_blind_eur_day",
+                 round(float(np.mean([r["penalty_blind_eur"] for r in sel])),
+                       1), "what the PUE-blind site forfeits")
+    for rho in sorted({r["rho"] for r in rows} - {0.0}):
+        sel = [r for r in rows if r["rho"] == rho]
+        emit(f"e9.withhold_co2_t.rho_{rho:.2f}",
+             round(float(np.mean([r["withhold_co2_t"] for r in sel])), 3),
+             "E8-side board carbon cost of the withheld band")
+    save_json("e9_reserve.json", dict(
+        n_scenarios=batch.n, scenario_days=scenario_days,
+        vmap_scen_per_s=batch.n / t_vmap, loop_scen_per_s=batch.n / t_loop,
+        speedup_x=t_loop / t_vmap, parity=par, rows=rows))
+    return dict(rows=rows, parity=par)
+
+
+if __name__ == "__main__":
+    run()

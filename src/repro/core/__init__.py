@@ -2,7 +2,8 @@
 
 Tier-1 (pid), Tier-2 (ar4), Tier-3 (tier3), safety island (island),
 four-component PUE model (pue), Algorithm 1 dispatch (dispatch), the V100
-power/thermal plant (plant), the multiscale digital twin (twin), and the
+power/thermal plant (plant), the multiscale digital twin (twin), the
+reserve-market replay & settlement engine (reserve), and the
 trainer-facing composition (controller).
 """
 from repro.core.controller import GridPilot, PowerPlan, plan_from_operating_point
@@ -18,6 +19,9 @@ from repro.core.pue import facility_power, free_cooling_fraction
 from repro.core.island import SafetyIsland, PythonSupervisor
 from repro.core.dispatch import (GridPilotDispatcher, Job, replay_schedule,
                                  schedule_from_threshold, signal_thresholds)
+from repro.core.reserve import (ReserveEvents, event_verdict, reserve_replay,
+                                reserve_replay_batch,
+                                reserve_replay_reference, settle_reserve)
 from repro.core.twin import (TwinConfig, TwinInputs, TwinScenario,
                              net_co2_decomposition, prepare_scenario,
                              run_twin, run_twin_batch, stack_scenarios,
@@ -33,6 +37,8 @@ __all__ = [
     "SafetyIsland", "PythonSupervisor",
     "GridPilotDispatcher", "Job", "replay_schedule",
     "schedule_from_threshold", "signal_thresholds",
+    "ReserveEvents", "event_verdict", "reserve_replay",
+    "reserve_replay_batch", "reserve_replay_reference", "settle_reserve",
     "TwinConfig", "TwinInputs", "TwinScenario", "net_co2_decomposition",
     "prepare_scenario", "run_twin", "run_twin_batch", "stack_scenarios",
     "summarize_twin",

@@ -38,8 +38,6 @@ from typing import Optional
 
 import numpy as np
 
-import repro.core.tier3 as tier3_lib
-
 TRIGGER_MAGIC = 0x46465221  # "FFR!"
 TRIGGER_FMT = "<IIf"        # magic, op-point index, grid frequency Hz
 TRIGGER_SIZE = struct.calcsize(TRIGGER_FMT)
@@ -98,10 +96,7 @@ class SafetyIsland:
         # cap_table: (n_ops, n_chips) float32, fully precomputed.
         assert cap_table.ndim == 2 and cap_table.shape[1] == n_chips
         self.table = np.ascontiguousarray(cap_table, np.float32)
-        self.caps = np.full(n_chips, np.float32(tier3_lib.MU_GRID[-1]))
-        self.caps = np.ascontiguousarray(
-            self.table[0].copy()
-        )  # register file
+        self.caps = np.ascontiguousarray(self.table[0].copy())  # register file
         self.armed_row = 0
         self.trigger_count = 0
         self.last_trigger_ns = 0

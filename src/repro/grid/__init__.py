@@ -6,7 +6,13 @@ from repro.grid.signals import (
     synthesize_t_amb,
     make_grid,
 )
-from repro.grid.markets import FR_PRODUCTS, FFRTriggerGen
+from repro.grid.markets import FR_PRODUCTS, PRODUCT_ORDER, FFRTriggerGen
+from repro.grid.frequency import (
+    EventBatch,
+    apply_events,
+    sample_events,
+    synthesize_frequency_batch,
+)
 from repro.grid.scenarios import (
     ScenarioBatch,
     ScenarioSpec,
@@ -23,7 +29,12 @@ __all__ = [
     "synthesize_t_amb",
     "make_grid",
     "FR_PRODUCTS",
+    "PRODUCT_ORDER",
     "FFRTriggerGen",
+    "EventBatch",
+    "apply_events",
+    "sample_events",
+    "synthesize_frequency_batch",
     "ScenarioBatch",
     "ScenarioSpec",
     "build_scenario_batch",

@@ -22,16 +22,24 @@ class FRProduct:
     trigger_hz: float           # activation threshold
     full_delivery_hz: float     # frequency at which full reserve is due
     min_duration_s: float       # sustain requirement
+    # capacity (availability) price in EUR per committed meter-MW per hour,
+    # Nordic/ENTSO-E auction order of magnitude: the fast products clear
+    # high because few assets pre-qualify.
+    capacity_price_eur_mw_h: float = 10.0
 
 
 FR_PRODUCTS: dict[str, FRProduct] = {
     # Nordic Fast Frequency Reserve: the strictest European product
-    "FFR": FRProduct("FFR", 700.0, 49.7, 49.5, 30.0),
-    "FCR-D": FRProduct("FCR-D", 5_000.0, 49.9, 49.5, 60.0),
-    "FCR": FRProduct("FCR", 30_000.0, 49.98, 49.8, 900.0),
-    "aFRR": FRProduct("aFRR", 300_000.0, 49.99, 49.9, 3600.0),
-    "mFRR": FRProduct("mFRR", 750_000.0, 49.99, 49.9, 3600.0),
+    "FFR": FRProduct("FFR", 700.0, 49.7, 49.5, 30.0, 45.0),
+    "FCR-D": FRProduct("FCR-D", 5_000.0, 49.9, 49.5, 60.0, 18.0),
+    "FCR": FRProduct("FCR", 30_000.0, 49.98, 49.8, 900.0, 15.0),
+    "aFRR": FRProduct("aFRR", 300_000.0, 49.99, 49.9, 3600.0, 9.0),
+    "mFRR": FRProduct("mFRR", 750_000.0, 49.99, 49.9, 3600.0, 5.0),
 }
+
+# Stable product indexing for the batched reserve engine: a scenario's
+# product is carried as an int32 index into this tuple on device.
+PRODUCT_ORDER: tuple[str, ...] = tuple(FR_PRODUCTS)
 
 
 class FFRTriggerGen:
@@ -62,7 +70,12 @@ class FFRTriggerGen:
         return sorted(out)
 
     def frequency_trace(self, events, n_seconds: int) -> np.ndarray:
-        """Grid frequency at 1 Hz over the horizon with the sampled events."""
+        """Grid frequency at 1 Hz over the horizon with the sampled events.
+
+        Events are applied in list order with overwrite semantics (a later
+        event's ramp wins on overlapping seconds); each event is two slice
+        assignments, not a per-second loop.
+        """
         f = np.full(n_seconds, NOMINAL_HZ)
         f += 0.01 * np.cumsum(
             self.rng.standard_normal(n_seconds)
@@ -70,11 +83,9 @@ class FFRTriggerGen:
         for (t, nadir, rec) in events:
             t0 = int(t)
             fall_s = max(int((NOMINAL_HZ - nadir) / self.rocof), 1)
-            for k in range(fall_s):
-                if t0 + k < n_seconds:
-                    f[t0 + k] = NOMINAL_HZ - self.rocof * k
-            for k in range(int(rec)):
-                i = t0 + fall_s + k
-                if i < n_seconds:
-                    f[i] = nadir + (NOMINAL_HZ - nadir) * k / rec
+            kf = np.arange(max(min(t0 + fall_s, n_seconds) - t0, 0))
+            f[t0:t0 + kf.size] = NOMINAL_HZ - self.rocof * kf
+            r0 = t0 + fall_s
+            kr = np.arange(max(min(r0 + int(rec), n_seconds) - r0, 0))
+            f[r0:r0 + kr.size] = nadir + (NOMINAL_HZ - nadir) * kr / rec
         return f

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 import repro.core.pue as pue_lib
+from repro.grid.markets import PRODUCT_ORDER
 from repro.grid.signals import COUNTRY_ORDER, synthesize_ci, synthesize_t_amb
 
 DEFAULT_HORIZON_H = 28 * 24
@@ -42,6 +43,11 @@ class ScenarioSpec:
     mw: float = 10.0             # site IT design power
     pue_design: float = pue_lib.PUE_DESIGN
     horizon_h: int = DEFAULT_HORIZON_H
+    # reserve-market axes (the E9 seconds tier): FR product sold, committed
+    # band rho (fraction of design IT power), frequency-event draw
+    product: str = "FFR"
+    reserve_rho: float = 0.0
+    event_seed: int = 0
 
 
 def product_specs(countries: Sequence[str] = tuple(COUNTRY_ORDER),
@@ -49,13 +55,19 @@ def product_specs(countries: Sequence[str] = tuple(COUNTRY_ORDER),
                   start_days: Sequence[int] = (15,),
                   mw_levels: Sequence[float] = (10.0,),
                   pue_designs: Sequence[float] = (pue_lib.PUE_DESIGN,),
-                  horizon_h: int = DEFAULT_HORIZON_H) -> list[ScenarioSpec]:
-    """Cartesian (country x season x seed x level x design) scenario grid."""
+                  horizon_h: int = DEFAULT_HORIZON_H,
+                  products: Sequence[str] = ("FFR",),
+                  reserve_rhos: Sequence[float] = (0.0,),
+                  event_seeds: Sequence[int] = (0,)) -> list[ScenarioSpec]:
+    """Cartesian (country x season x seed x level x design x product x rho
+    x event draw) scenario grid."""
     return [
         ScenarioSpec(country=c, seed=s, start_day=d, mw=m, pue_design=pd,
-                     horizon_h=horizon_h)
-        for c, d, s, m, pd in itertools.product(
-            countries, start_days, seeds, mw_levels, pue_designs)
+                     horizon_h=horizon_h, product=p, reserve_rho=r,
+                     event_seed=es)
+        for c, d, s, m, pd, p, r, es in itertools.product(
+            countries, start_days, seeds, mw_levels, pue_designs,
+            products, reserve_rhos, event_seeds)
     ]
 
 
@@ -73,6 +85,9 @@ class ScenarioBatch:
     ci: jax.Array            # (N, H_max) float32, right-padded with 0
     t_amb: jax.Array         # (N, H_max) float32, right-padded with T_REF
     mask: jax.Array          # (N, H_max) float32, 1.0 on valid hours
+    product_idx: jax.Array   # (N,) int32 index into markets.PRODUCT_ORDER
+    reserve_rho: jax.Array   # (N,) float32 committed FR band
+    event_seed: jax.Array    # (N,) int32 frequency-event draw
 
     @property
     def n(self) -> int:
@@ -93,6 +108,9 @@ class ScenarioBatch:
             mw=float(self.mw[i]),
             pue_design=float(self.pue_design[i]),
             horizon_h=int(self.hours[i]),
+            product=PRODUCT_ORDER[int(self.product_idx[i])],
+            reserve_rho=float(self.reserve_rho[i]),
+            event_seed=int(self.event_seed[i]),
         )
 
     def select(self, i: int) -> dict:
@@ -130,6 +148,11 @@ def build_scenario_batch(specs: Sequence[ScenarioSpec]) -> ScenarioBatch:
         ci=jnp.asarray(ci),
         t_amb=jnp.asarray(t_amb),
         mask=jnp.asarray(mask),
+        product_idx=jnp.asarray(
+            [PRODUCT_ORDER.index(s.product) for s in specs], jnp.int32),
+        reserve_rho=jnp.asarray(
+            [s.reserve_rho for s in specs], jnp.float32),
+        event_seed=jnp.asarray([s.event_seed for s in specs], jnp.int32),
     )
 
 

@@ -69,6 +69,23 @@ def test_pue_aware_reduces_facility_co2():
     assert a.co2_t <= b.co2_t * 1.02
 
 
+def test_reserve_rho_withholds_capacity():
+    """A nonzero FFR band caps usable nodes at (1 - rho) of the fleet:
+    peak utilisation stays under the band (plus idle overhead) and all
+    jobs still eventually run on the reduced fleet."""
+    jobs_0 = synthesize_m100_trace(40, 48.0, 32, seed=5)
+    jobs_r = synthesize_m100_trace(40, 48.0, 32, seed=5)
+    s0 = _dispatcher(seed=5).run(jobs_0, horizon_h=96)
+    sr = _dispatcher(seed=5).run(jobs_r, horizon_h=96, reserve_rho=0.75)
+    # the 0.08 idle draw of the withheld 75 % of nodes rides on top of
+    # the 25 % usable band (dispatch.py charges idle nodes at 8 % TDP)
+    assert max(sr.util_trace) <= 0.25 + 0.08 + 1e-6
+    assert max(sr.util_trace) < max(s0.util_trace)
+    assert sum(1 for j in jobs_r if j.start_h >= 0) == len(jobs_r)
+    # withholding three quarters of the fleet cannot shorten waits
+    assert np.mean(sr.wait_hours) >= np.mean(s0.wait_hours) - 1e-9
+
+
 @given(st.integers(0, 10_000))
 @settings(max_examples=20, deadline=None)
 def test_beta_monotone_in_wait(seed):

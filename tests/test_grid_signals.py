@@ -43,3 +43,46 @@ def test_frequency_trace_events():
     if ev:  # poisson could be 0, but with rate 6 it's ~never
         assert trace.min() < 49.7
     assert abs(np.median(trace) - 50.0) < 0.05
+
+
+def _frequency_trace_loop(gen, events, n_seconds):
+    """The pre-vectorisation per-second loop, kept as the parity oracle."""
+    f = np.full(n_seconds, markets.NOMINAL_HZ)
+    f += 0.01 * np.cumsum(
+        gen.rng.standard_normal(n_seconds)
+    ) / np.sqrt(np.arange(1, n_seconds + 1))
+    for (t, nadir, rec) in events:
+        t0 = int(t)
+        fall_s = max(int((markets.NOMINAL_HZ - nadir) / gen.rocof), 1)
+        for k in range(fall_s):
+            if t0 + k < n_seconds:
+                f[t0 + k] = markets.NOMINAL_HZ - gen.rocof * k
+        for k in range(int(rec)):
+            i = t0 + fall_s + k
+            if i < n_seconds:
+                f[i] = nadir + (markets.NOMINAL_HZ - nadir) * k / rec
+    return f
+
+
+@pytest.mark.parametrize("seed", [0, 4, 9])
+def test_frequency_trace_vectorised_parity(seed):
+    """The slice-assignment trace must equal the old per-second loop
+    element-wise (bit-for-bit: identical draws, identical arithmetic)."""
+    n = 3 * 3600
+    gen_v = markets.FFRTriggerGen(events_per_day=10.0, seed=seed)
+    gen_l = markets.FFRTriggerGen(events_per_day=10.0, seed=seed)
+    ev = gen_v.sample_day()
+    assert gen_l.sample_day() == ev
+    np.testing.assert_array_equal(gen_v.frequency_trace(ev, n),
+                                  _frequency_trace_loop(gen_l, ev, n))
+
+
+def test_frequency_trace_truncates_at_horizon():
+    """Events starting near (or past) the horizon edge must not write out
+    of bounds and must clip their ramps."""
+    gen = markets.FFRTriggerGen(seed=0)
+    n = 200
+    tr = gen.frequency_trace([(190.0, 49.5, 300.0), (500.0, 49.5, 60.0)], n)
+    assert tr.shape == (n,)
+    assert tr[190] == markets.NOMINAL_HZ  # ramp starts: 50 - rocof*0
+    assert tr.min() >= 49.0

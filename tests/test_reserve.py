@@ -1,0 +1,275 @@
+"""Reserve engine: FR_PRODUCTS compliance semantics, settlement edge
+cases, and scan-vs-reference parity on pinned seeds."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+import repro.core.plant as plant_lib
+import repro.core.reserve as reserve
+from repro.grid import frequency, markets
+
+FFR = markets.PRODUCT_ORDER.index("FFR")
+FCRD = markets.PRODUCT_ORDER.index("FCR-D")
+FFR_TRIG = markets.FR_PRODUCTS["FFR"].trigger_hz          # 49.7
+FFR_DUR = int(markets.FR_PRODUCTS["FFR"].min_duration_s)  # 30 s
+
+
+def _run(freq, hours=1, mu=0.9, ta=10.0, valid_s=None, product_idx=FFR,
+         rho=0.2, mw=10.0, pd=1.2, aware=True):
+    freq = np.asarray(freq, np.float32)
+    mu_h = jnp.full((hours,), mu, jnp.float32)
+    ta_h = jnp.full((hours,), ta, jnp.float32)
+    out = reserve.reserve_replay(
+        jnp.asarray(freq), mu_h, ta_h,
+        freq.shape[0] if valid_s is None else valid_s,
+        product_idx, rho, mw, pd, pue_aware=aware)
+    return jax.tree.map(np.asarray, out)
+
+
+def _flat(T, dips=()):
+    f = np.full(T, 50.0, np.float32)
+    for (t0, t1, hz) in dips:
+        f[t0:t1] = hz
+    return f
+
+
+# ---------------------------------------------------------------------------
+# detection semantics
+# ---------------------------------------------------------------------------
+
+
+def test_no_event_in_horizon():
+    out = _run(_flat(3600))
+    assert out["n_events"] == 0 and out["active_s"] == 0
+    assert not out["events"].valid.any()
+    s = jax.tree.map(np.asarray, reserve.settle_reserve(
+        jax.tree.map(jnp.asarray, out["events"]), FFR, 0.2, 10.0, 1.2, 1))
+    p = markets.FR_PRODUCTS["FFR"]
+    assert float(s["penalty_eur"]) == 0.0
+    assert float(s["capacity_eur"]) == pytest.approx(
+        0.2 * 10.0 * 1.2 * 1 * p.capacity_price_eur_mw_h, rel=1e-6)
+    assert float(s["net_eur"]) == pytest.approx(float(s["capacity_eur"]))
+
+
+def test_exact_threshold_does_not_trigger():
+    """Activation requires frequency strictly BELOW the trigger (the same
+    strictness as the safety island's `freq >= threshold: continue`)."""
+    f = _flat(3600, [(100, 140, FFR_TRIG)])          # exactly at threshold
+    assert _run(f)["n_events"] == 0
+    f = _flat(3600, [(100, 140, FFR_TRIG - 1e-3)])   # just below
+    out = _run(f)
+    assert out["n_events"] == 1
+    assert out["events"].t_event_s[0] == 100
+
+
+def test_event_truncated_at_horizon_edge():
+    """An activation too close to the end of the committed horizon cannot
+    complete its min_duration_s window: sustain fails, budget still holds."""
+    T = 3600
+    f = _flat(T, [(T - 10, T, 49.5)])
+    out = _run(f)
+    ev = out["events"]
+    assert out["n_events"] == 1
+    assert ev.sustain_s[0] == pytest.approx(10.0)
+    assert not ev.sustain_ok[0] and not ev.compliant[0]
+    assert ev.budget_ok[0]
+    assert out["active_s"] == 10      # shed gated to the valid horizon
+
+
+def test_ragged_horizon_gates_detection():
+    """Crossings beyond valid_s are padding and must not trigger."""
+    f = _flat(7200, [(4000, 4100, 49.5)])
+    assert _run(f, hours=2, valid_s=3600)["n_events"] == 0
+    assert _run(f, hours=2, valid_s=7200)["n_events"] == 1
+
+
+def test_overlapping_dips_merge_into_held_window():
+    """A crossing inside the held min_duration_s window does not
+    re-trigger; after release a fresh crossing starts a new event."""
+    f = _flat(3600, [(100, 103, 49.5), (110, 113, 49.5), (160, 163, 49.5)])
+    out = _run(f)
+    ev = out["events"]
+    assert out["n_events"] == 2
+    np.testing.assert_array_equal(ev.t_event_s[:2], [100, 160])
+    # each event holds exactly the 30 s support window
+    assert out["active_s"] == 2 * FFR_DUR
+
+
+def test_long_event_holds_until_recovery():
+    """If frequency is still below the trigger when the window expires,
+    the site keeps shedding until recovery (one event, not several)."""
+    f = _flat(3600, [(100, 200, 49.5)])   # 100 s below, > 30 s window
+    out = _run(f)
+    assert out["n_events"] == 1
+    # shed spans 100..200 inclusive: the release decision second (first
+    # recovered second with the window complete) still sheds
+    assert out["active_s"] == 101
+
+
+# ---------------------------------------------------------------------------
+# delivery verdicts
+# ---------------------------------------------------------------------------
+
+
+def test_delivery_time_matches_governor_model():
+    """t_full = actuation delay + multiplicative-slew ramp; the paper's
+    ~97 ms FFR number sits far inside the 700 ms budget."""
+    out = _run(_flat(3600, [(100, 103, 49.5)]), mu=0.9, rho=0.2,
+               aware=False)
+    ev = out["events"]
+    t_full = plant_lib.ACTUATE_DELAY_MS + float(
+        np.log(0.9 / 0.7)) / plant_lib.GOV_SLEW
+    assert ev.t_full_ms[0] == pytest.approx(t_full, rel=1e-4)
+    assert 50.0 < ev.t_full_ms[0] < 200.0
+    assert ev.budget_ok[0]
+
+
+def test_blind_underdelivers_at_meter():
+    """PUE-blind arming sheds rho of IT and delivers less at the meter
+    when the marginal PUE is below the static design PUE -- strongest in
+    cold hours, where free cooling means shedding IT barely moves the
+    chiller; the aware correction hits the committed number."""
+    f = _flat(3600, [(100, 103, 49.5)])
+    aware = _run(f, mu=0.5, ta=0.0, rho=0.2, aware=True)["events"]
+    blind = _run(f, mu=0.5, ta=0.0, rho=0.2, aware=False)["events"]
+    assert blind.delivered_frac[0] < aware.delivered_frac[0]
+    assert blind.delivered_frac[0] < 1.0 - reserve.DELIVERY_TOL
+    assert not blind.delivered_ok[0]
+    assert aware.delivered_frac[0] == pytest.approx(1.0, abs=0.01)
+    assert aware.delivered_ok[0] and aware.compliant[0]
+
+
+def test_low_mu_hour_cannot_deliver_full_band():
+    """With mu barely above the fleet floor the armed band is clipped and
+    even the aware controller under-delivers -- the settlement engine
+    prices exactly this commitment risk."""
+    out = _run(_flat(3600, [(100, 103, 49.5)]), mu=0.3, rho=0.2)
+    ev = out["events"]
+    assert ev.delivered_frac[0] < 0.8
+    assert not ev.delivered_ok[0] and not ev.compliant[0]
+
+
+def test_zero_band_is_trivially_delivered():
+    out = _run(_flat(3600, [(100, 103, 49.5)]), rho=0.0)
+    ev = out["events"]
+    assert out["n_events"] == 1
+    assert ev.delivered_frac[0] == pytest.approx(1.0)
+    assert ev.compliant[0]
+    assert out["shed_it_mwh"] == pytest.approx(0.0)
+
+
+# ---------------------------------------------------------------------------
+# settlement
+# ---------------------------------------------------------------------------
+
+
+def test_settlement_penalty_arithmetic():
+    ev = reserve.ReserveEvents(
+        t_event_s=jnp.asarray([100, 2000], jnp.int32),
+        t_full_ms=jnp.asarray([90.0, 90.0], jnp.float32),
+        sustain_s=jnp.asarray([30.0, 10.0], jnp.float32),
+        delivered_mw=jnp.asarray([2.4, 1.2], jnp.float32),
+        delivered_frac=jnp.asarray([1.0, 0.5], jnp.float32),
+        budget_ok=jnp.asarray([True, True]),
+        sustain_ok=jnp.asarray([True, False]),
+        delivered_ok=jnp.asarray([True, False]),
+        compliant=jnp.asarray([True, False]),
+        valid=jnp.asarray([True, True]),
+    )
+    s = jax.tree.map(float, jax.tree.map(np.asarray, reserve.settle_reserve(
+        ev, FFR, 0.2, 10.0, 1.2, 24)))
+    price = markets.FR_PRODUCTS["FFR"].capacity_price_eur_mw_h
+    committed = 0.2 * 10.0 * 1.2
+    assert s["committed_mw"] == pytest.approx(committed, rel=1e-6)
+    assert s["capacity_eur"] == pytest.approx(committed * 24 * price,
+                                              rel=1e-6)
+    # event 1: fully delivered, no penalty; event 2: 50 % shortfall plus
+    # a hard sustain miss => 1.5x the at-risk window
+    at_risk = price * committed * reserve.PENALTY_WINDOW_H
+    assert s["penalty_eur"] == pytest.approx(1.5 * at_risk, rel=1e-5)
+    assert s["n_events"] == 2 and s["n_compliant"] == 1
+
+
+def test_settlement_ignores_invalid_slots():
+    z = jnp.zeros((reserve.E_MAX,), jnp.float32)
+    ev = reserve.ReserveEvents(
+        t_event_s=jnp.full((reserve.E_MAX,), -1, jnp.int32),
+        t_full_ms=z, sustain_s=z, delivered_mw=z,
+        delivered_frac=z,   # shortfall would be 1.0 if it counted
+        budget_ok=jnp.zeros((reserve.E_MAX,), bool),
+        sustain_ok=jnp.zeros((reserve.E_MAX,), bool),
+        delivered_ok=jnp.zeros((reserve.E_MAX,), bool),
+        compliant=jnp.zeros((reserve.E_MAX,), bool),
+        valid=jnp.zeros((reserve.E_MAX,), bool),
+    )
+    s = reserve.settle_reserve(ev, FCRD, 0.3, 50.0, 1.2, 24)
+    assert float(s["penalty_eur"]) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# scan vs per-event Python reference, pinned seeds
+# ---------------------------------------------------------------------------
+
+
+def _pinned_batch():
+    """Small mixed batch: both products, ragged horizons, mixed rho."""
+    n = 6
+    T = 4 * 3600
+    seeds = np.arange(10, 10 + n)
+    pidx = np.asarray([FFR, FFR, FFR, FCRD, FCRD, FFR], np.int32)
+    freq, _ = frequency.synthesize_frequency_batch(
+        seeds, pidx, n_seconds=T, events_per_day=24.0)
+    rng = np.random.default_rng(0)
+    mu_h = jnp.asarray(rng.uniform(0.3, 0.9, (n, 4)), jnp.float32)
+    ta_h = jnp.asarray(rng.uniform(-5.0, 28.0, (n, 4)), jnp.float32)
+    valid_s = jnp.asarray([T, T, 2 * 3600, T, 3 * 3600, T], jnp.int32)
+    rho = jnp.asarray([0.2, 0.0, 0.3, 0.1, 0.2, 0.25], jnp.float32)
+    mw = jnp.asarray([10.0, 10.0, 50.0, 1.0, 10.0, 10.0], jnp.float32)
+    pd = jnp.asarray([1.2, 1.2, 1.1, 1.3, 1.2, 1.2], jnp.float32)
+    return freq, mu_h, ta_h, valid_s, jnp.asarray(pidx), rho, mw, pd
+
+
+@pytest.mark.parametrize("aware", [True, False])
+def test_scan_matches_reference(aware):
+    args = _pinned_batch()
+    out = jax.tree.map(np.asarray, reserve.reserve_replay_batch(
+        *args, pue_aware=aware))
+    total_events = 0
+    for i in range(args[0].shape[0]):
+        ref = reserve.reserve_replay_reference(
+            *[np.asarray(a)[i] for a in args], pue_aware=aware)
+        total_events += ref["n_events"]
+        for field in ("t_event_s", "budget_ok", "sustain_ok",
+                      "delivered_ok", "compliant", "valid"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(out["events"], field))[i],
+                np.asarray(getattr(ref["events"], field)),
+                err_msg=f"scenario {i} field {field}")
+        assert int(out["n_events"][i]) == ref["n_events"]
+        assert int(out["active_s"][i]) == ref["active_s"]
+        for field in ("t_full_ms", "sustain_s", "delivered_mw",
+                      "delivered_frac"):
+            np.testing.assert_allclose(
+                np.asarray(getattr(out["events"], field))[i],
+                np.asarray(getattr(ref["events"], field)),
+                atol=1e-3, err_msg=f"scenario {i} field {field}")
+        np.testing.assert_allclose(out["shed_it_mwh"][i],
+                                   ref["shed_it_mwh"], rtol=1e-4, atol=1e-6)
+    assert total_events > 0   # the pinned seeds exercise real events
+
+
+def test_batch_matches_single_scenario_calls():
+    args = _pinned_batch()
+    batched = jax.tree.map(np.asarray,
+                           reserve.reserve_replay_batch(*args))
+    for i in (0, 3, 5):
+        single = jax.tree.map(np.asarray, reserve.reserve_replay(
+            *[jnp.asarray(np.asarray(a)[i]) for a in args]))
+        for field in reserve.ReserveEvents._fields:
+            a = np.asarray(getattr(batched["events"], field))[i]
+            b = np.asarray(getattr(single["events"], field))
+            if a.dtype == np.float32:
+                np.testing.assert_allclose(a, b, atol=1e-4, err_msg=field)
+            else:
+                np.testing.assert_array_equal(a, b, err_msg=field)

@@ -71,6 +71,20 @@ def test_product_specs_cartesian():
     assert len(set(specs)) == 8
 
 
+def test_batch_reserve_fields_roundtrip():
+    """The E9 axes (product, committed band, event draw) ride the batch."""
+    specs = product_specs(countries=("SE",), horizon_h=24,
+                          products=("FFR", "FCR-D"),
+                          reserve_rhos=(0.0, 0.2), event_seeds=(0, 3))
+    assert len(specs) == 8
+    batch = build_scenario_batch(specs)
+    assert batch.product_idx.shape == batch.reserve_rho.shape == (8,)
+    for i, s in enumerate(specs):
+        got = batch.spec(i)
+        assert (got.product, got.event_seed) == (s.product, s.event_seed)
+        assert got.reserve_rho == pytest.approx(s.reserve_rho)
+
+
 def test_masked_quantile_matches_numpy():
     rng = np.random.default_rng(0)
     x = rng.normal(size=64).astype(np.float32)
