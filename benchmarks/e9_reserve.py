@@ -1,48 +1,53 @@
-"""E9: batched frequency-reserve replay & settlement (the seconds tier).
+"""E9: batched frequency-reserve replay & settlement (the seconds tier),
+driven end-to-end by the unified rollout engine (``repro.core.engine``).
 
-Replays >= 200 scenario-days of synthetic 1 Hz grid frequency against the
-plant + PUE models and settles each scenario's committed reserve band:
+Replays >= 200 scenario-days of synthetic 1 Hz grid frequency through ONE
+``jit(vmap(lax.scan))`` per arm -- ``engine_rollout`` composes, per
+scenario and per second:
 
-  * frequency synthesis: ``repro.grid.frequency`` (one vmapped jit),
-  * replay + verification + settlement: ``repro.core.reserve`` -- the
-    whole (country x seed x product x rho x event-draw) batch as ONE
-    jitted ``vmap(scan)`` over seconds (`e9_sweep`),
-  * the energy side: the SAME call threads ``reserve_rho`` into the E8
-    machinery -- committing a band rho floors the hourly schedule at
-    ``rho + MIN_RESIDUAL_LOAD`` (the shed must stay physical), and
-    ``replay_schedule`` integrates the facility energy/carbon cost of
-    that withheld band against the rho = 0 schedule.
+  * Tier-3 operating-point selection (mu free, the committed band rho
+    fixed by the scenario: ``rho_mode="batch"``),
+  * the hourly schedule energy/carbon accounting (``replay_schedule`` --
+    committing a band floors the schedule at ``rho + MIN_RESIDUAL_LOAD``
+    via the grid search's feasibility constraint, the E8-side cost),
+  * the digital twin's 1 Hz plant/Tier-2 physics,
+  * the reserve detection state machine fused into the same scan, with
+    per-event delivery verdicts evaluated at the twin's RLS-tracked
+    per-second IT power (``events``) AND at the schedule's quasi-static
+    mu (``events_sched``, exact parity vs the per-event reference loop),
+  * capacity-revenue / clawback settlement.
 
 Headline contrasts:
-  * scenarios/sec of the vmapped scan vs the per-event Python reference
-    loop (`reserve_replay_reference`), with exact verdict parity,
-  * PUE-aware vs PUE-blind meter delivery: the blind site under-delivers
-    at the meter (paper: 4-7 pp) and forfeits reserve revenue,
-  * per-rho settlement: capacity revenue vs penalties vs the E8-side
-    carbon cost of withholding the band.
+  * scenarios/sec of the fused engine vs the per-event Python reference
+    loop (`reserve_replay_reference`), with exact verdict parity on the
+    schedule-side events,
+  * twin-coupled vs quasi-static delivery: the twin under-delivers when
+    Tier-2 tracking error leaves the plant below the scheduled operating
+    point at the trigger second -- the divergence the old pipeline could
+    not see,
+  * PUE-aware vs PUE-blind meter delivery (paper: 4-7 pp under-delivery),
+  * per-(product, rho) settlement vs the E8-side carbon cost of the band,
+  * price-aware vs price-blind Tier-3: feeding `settle_reserve`'s revenue
+    / clawback physics back into the (mu, rho) grid search shifts the
+    chosen operating points (`rho_mode="tier3"`).
 """
 from __future__ import annotations
 
+import dataclasses
 import time
-from functools import partial
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, save_json
-import repro.core.dispatch as dispatch
-import repro.core.pue as pue_lib
+import repro.core.engine as engine_lib
 import repro.core.reserve as reserve
-import repro.core.tier3 as tier3_lib
 from repro.grid import frequency
-from repro.grid.scenarios import build_scenario_batch, product_specs
+from repro.grid.scenarios import (build_scenario_batch, frequency_seeds,
+                                  product_specs)
 from repro.grid.signals import COUNTRY_ORDER
 
 HORIZON_H = 24              # one scenario = one replayed day
-MU_HI = 0.9
-LO = 0.25
-DEMAND = 0.6                # mean utilisation the job trace requires
 EVENTS_PER_DAY = 4.0
 RHO_LEVELS = (0.0, 0.1, 0.2, 0.3)
 PRODUCTS = ("FFR", "FCR-D")
@@ -63,71 +68,31 @@ def build_e9_batch(fast: bool = False):
     return specs, build_scenario_batch(specs)
 
 
-def freq_seeds(batch) -> jnp.ndarray:
-    """Deterministic per-scenario frequency-synthesis seed: scenarios that
-    differ only in country/rho draw the same grid-event day.  Scenarios
-    differing in product share event *times* but not depths (the nadir
-    window is product-specific), so cross-product settlement rows compare
-    product rules on similar, not identical, traces."""
-    return (jnp.asarray(batch.event_seed, jnp.uint32) * 100_003
-            + jnp.asarray(batch.seed, jnp.uint32))
+def engine_config(fast: bool = False, **overrides) -> engine_lib.EngineConfig:
+    """The E9 engine: a small twin fleet (site MW arrives traced via the
+    batch) with the reserve scan fused in.  fast mode replays 6 h slices;
+    raise the event rate so the smoke run still detects and settles."""
+    cfg = engine_lib.EngineConfig(
+        n_hosts=2, chips_per_host=2, e_max=E_MAX,
+        events_per_day=24.0 if fast else EVENTS_PER_DAY)
+    return dataclasses.replace(cfg, **overrides)
 
 
-def _mu_schedule(ci, t_amb, mask, rho, pue_design):
-    """Hourly schedule with the reserve band threaded into the E8 path.
-
-    Withholding rho means the fleet must keep ``rho + MIN_RESIDUAL_LOAD``
-    running at all times (the committed shed has to stay physical), so the
-    dirty-hour shed floor rises with rho -- that floor is the energy-side
-    cost of the commitment.  Total scheduled work is held constant across
-    rho levels via the n_hi ranking, so the carbon delta is pure cost.
-    """
-    hv = jnp.sum(mask)
-    lo = jnp.maximum(LO, rho + tier3_lib.MIN_RESIDUAL_LOAD)
-    n_hi = jnp.clip(jnp.round((DEMAND * hv - lo * hv) / (MU_HI - lo)),
-                    0.0, hv)
-    sigma = ci * pue_lib.pue(MU_HI, t_amb, pue_design=pue_design)
-    thr = dispatch.signal_thresholds(sigma, mask, n_hi[None])[0]
-    return dispatch.schedule_from_threshold(sigma, thr, lo, mask, MU_HI)
-
-
-@partial(jax.jit, static_argnames=("pue_aware",))
-def e9_sweep(batch, freq, *, pue_aware: bool = True) -> dict:
-    """The full E9 sweep as ONE compiled ``vmap(scan)`` over the batch:
-    schedule construction, E8 energy/carbon replay, 1 Hz reserve replay
-    with per-event verdicts, and settlement -- dict of (N,)/(N, E) leaves.
-    """
-
-    def one(ci, t_amb, mask, freq_i, pidx, rho, pue_design, mw, hours):
-        mu_h = _mu_schedule(ci, t_amb, mask, rho, pue_design)
-        energy = dispatch.replay_schedule(mu_h, ci, t_amb, mask,
-                                          pue_design=pue_design, design_w=mw)
-        res = reserve.reserve_replay(freq_i, mu_h, t_amb, hours * 3600,
-                                     pidx, rho, mw, pue_design,
-                                     pue_aware=pue_aware, e_max=E_MAX)
-        settle = reserve.settle_reserve(res["events"], pidx, rho, mw,
-                                        pue_design, hours)
-        return dict(
-            mu_h=mu_h,
-            events=res["events"],
-            active_s=res["active_s"],
-            shed_it_mwh=res["shed_it_mwh"],
-            it_mwh=energy["it"],
-            fac_mwh=energy["fac"],
-            co2_t=energy["co2"] / 1000.0,
-            co2_it_t=energy["co2_it"] / 1000.0,
-            **settle,
-        )
-
-    return jax.vmap(one)(batch.ci, batch.t_amb, batch.mask, freq,
-                         batch.product_idx, batch.reserve_rho,
-                         batch.pue_design, batch.mw, batch.hours)
+def synthesize_inputs(cfg, batch):
+    """The (freq, loads) pair `engine_rollout` would synthesise itself;
+    prebuilt so the reference loop and both engine arms share one copy."""
+    n_seconds = int(batch.h_max) * 3600
+    freq, _ = frequency.synthesize_frequency_batch(
+        frequency_seeds(batch), batch.product_idx, n_seconds=n_seconds,
+        events_per_day=cfg.events_per_day, max_events=cfg.max_freq_events)
+    return freq, engine_lib.base_loads(cfg, batch)
 
 
 def reference_loop(batch, freq_np, mu_np, *, pue_aware: bool = True) -> list:
     """Per-event Python reference replay of every scenario (the speed
-    baseline; does strictly less work than `e9_sweep` -- no energy
-    integration or settlement -- so the reported speedup is conservative)."""
+    baseline; does strictly less work than the engine -- no twin physics,
+    energy integration or settlement -- so the reported speedup is
+    conservative)."""
     hours = np.asarray(batch.hours)
     return [
         reserve.reserve_replay_reference(
@@ -140,9 +105,11 @@ def reference_loop(batch, freq_np, mu_np, *, pue_aware: bool = True) -> list:
 
 
 def verdict_parity(out: dict, refs: list) -> dict:
-    """Exact match on detection/verdicts, max abs err on float fields."""
+    """Exact match on detection + schedule-side verdicts, max abs err on
+    float fields.  The engine's `events_sched` IS the reserve_replay
+    computation, so parity stays bit-exact on every bool/int field."""
     exact, max_err = True, 0.0
-    ev = out["events"]
+    ev = out["events_sched"]
     for i, r in enumerate(refs):
         rev = r["events"]
         for field in ("t_event_s", "budget_ok", "sustain_ok",
@@ -161,54 +128,95 @@ def verdict_parity(out: dict, refs: list) -> dict:
     return dict(verdicts_exact=exact, float_max_abs_err=max_err)
 
 
-def run(fast: bool = False, reps: int = 2) -> dict:
+def price_aware_points(fast: bool = False) -> dict:
+    """Tier-3 loop closure: let the grid search choose (mu, rho) per hour
+    (`rho_mode="tier3"`) with and without the settlement-revenue term and
+    report the chosen operating points per product."""
+    countries = ("SE", "DE", "PL") if fast else tuple(COUNTRY_ORDER)
+    specs = product_specs(countries=countries, seeds=(0,),
+                          horizon_h=6 if fast else HORIZON_H,
+                          products=PRODUCTS if not fast else ("FFR",))
+    batch = build_scenario_batch(specs)
+    rows = {}
+    for tag, price_aware in (("aware", True), ("blind", False)):
+        cfg = engine_config(fast, rho_mode="tier3", price_aware=price_aware,
+                            with_seconds=False)
+        out = jax.tree.map(np.asarray, engine_lib.engine_rollout(cfg, batch))
+        for p in {s.product for s in specs}:
+            idx = [i for i, s in enumerate(specs) if s.product == p]
+            rows[f"{p}.{tag}"] = dict(
+                mu=float(np.mean(out["mean_mu"][idx])),
+                rho=float(np.mean(out["mean_rho"][idx])))
+    for key, r in sorted(rows.items()):
+        emit(f"e9.tier3_op.{key}", f"mu={r['mu']:.3f} rho={r['rho']:.3f}",
+             "price-aware vs price-blind chosen operating point")
+    return rows
+
+
+def run(fast: bool = False) -> dict:
     specs, batch = build_e9_batch(fast)
-    n_seconds = int(batch.h_max) * 3600
-    # fast mode replays 6 h slices; raise the rate so the smoke run still
-    # detects and settles real events
-    rate = 24.0 if fast else EVENTS_PER_DAY
-    freq, _events = frequency.synthesize_frequency_batch(
-        freq_seeds(batch), batch.product_idx, n_seconds=n_seconds,
-        events_per_day=rate, max_events=E_MAX)
+    cfg = engine_config(fast)
+    freq, loads = synthesize_inputs(cfg, batch)
     scenario_days = batch.n * int(batch.h_max) / 24.0
-    emit("e9.n_scenarios", batch.n, "one jitted vmap(scan) over all")
+    emit("e9.n_scenarios", batch.n,
+         "one fused jit(vmap(scan)) over all tiers")
     emit("e9.scenario_days", round(scenario_days, 2),
          "days of 1 Hz frequency replayed per call")
 
-    # -- the one compiled call, aware + blind arms -------------------------
-    out = jax.tree.map(np.asarray, e9_sweep(batch, freq, pue_aware=True))
-    blind = jax.tree.map(np.asarray, e9_sweep(batch, freq, pue_aware=False))
+    # -- the one compiled call per arm (aware + blind) ---------------------
+    def sweep(pue_aware: bool) -> dict:
+        c = dataclasses.replace(cfg, pue_aware=pue_aware)
+        return jax.tree.map(np.asarray, engine_lib.engine_rollout(
+            c, batch, freq=freq, loads=loads))
+
+    out = sweep(True)
+    blind = sweep(False)
 
     # -- parity + throughput vs the per-event Python reference -------------
     freq_np, mu_np = np.asarray(freq), out["mu_h"]
     refs = reference_loop(batch, freq_np, mu_np)
     par = verdict_parity(out, refs)
     emit("e9.verdicts_exact", int(par["verdicts_exact"]),
-         "scan vs per-event reference, pinned seeds")
+         "engine events_sched vs per-event reference, pinned seeds")
     emit("e9.float_parity_max_abs_err", f"{par['float_max_abs_err']:.2e}",
          "delivery time / sustain / meter MW")
 
-    def timed(fn, leaf):
+    def timed(fn, leaf, reps: int = 2):
+        # best-of-reps: min-time is the standard de-noised estimate under
+        # CPU contention; compile caches are warm (the sweeps above)
         best = float("inf")
         for _ in range(reps):
             t0 = time.perf_counter()
-            r = fn()
-            jax.block_until_ready(leaf(r))
+            jax.block_until_ready(leaf(fn()))
             best = min(best, time.perf_counter() - t0)
         return best
 
-    t_vmap = timed(lambda: e9_sweep(batch, freq, pue_aware=True),
-                   lambda r: r["net_eur"])
+    t_engine = timed(lambda: engine_lib.engine_rollout(
+        cfg, batch, freq=freq, loads=loads), lambda r: r["net_eur"])
     t_loop = timed(lambda: reference_loop(batch, freq_np, mu_np),
-                   lambda r: r)
-    emit("e9.vmap_scen_per_s", round(batch.n / t_vmap, 1),
-         "one jitted vmap(scan), incl. energy replay + settlement")
+                   lambda r: np.asarray(0.0))
+    emit("e9.vmap_scen_per_s", round(batch.n / t_engine, 1),
+         "fused engine: twin physics + reserve + energy + settlement")
     emit("e9.loop_scen_per_s", round(batch.n / t_loop, 1),
-         "per-event python reference loop (replay only)")
-    emit("e9.speedup_x", round(t_loop / t_vmap, 1), "")
+         "per-event python reference loop (reserve verdicts ONLY; the "
+         "fused-vs-separate gate lives in the `engine` entry)")
+
+    # -- twin coupling: delivery at the twin's realised power --------------
+    committed = np.asarray(batch.reserve_rho) > 0
+    ev_t, ev_s = out["events"], out["events_sched"]
+    vt = np.asarray(ev_t.valid) & committed[:, None]
+    if vt.any():
+        d_twin = np.asarray(ev_t.delivered_frac)[vt]
+        d_sched = np.asarray(ev_s.delivered_frac)[vt]
+        emit("e9.delivered_frac.twin", round(float(np.mean(d_twin)), 4),
+             "verdict at the twin's RLS-tracked per-second IT power")
+        emit("e9.delivered_frac.sched", round(float(np.mean(d_sched)), 4),
+             "verdict at the schedule's quasi-static mu")
+        emit("e9.twin_vs_sched_gap_pp",
+             round(100.0 * float(np.mean(d_sched - d_twin)), 2),
+             "delivery the quasi-static replay overstates")
 
     # -- compliance: the PUE-aware meter correction is the revenue ---------
-    committed = np.asarray(batch.reserve_rho) > 0
     ev_a, ev_b = out["events"], blind["events"]
     va = np.asarray(ev_a.valid) & committed[:, None]
     vb = np.asarray(ev_b.valid) & committed[:, None]
@@ -245,13 +253,17 @@ def run(fast: bool = False, reps: int = 2) -> dict:
             penalty_blind_eur=float(blind["penalty_eur"][i]),
             n_events=int(out["n_events"][i]),
             n_compliant=int(out["n_compliant"][i]),
-            co2_t=float(out["co2_t"][i]),
-            it_mwh=float(out["it_mwh"][i]),
+            co2_t=float(out["sched_co2_t"][i]),
+            it_mwh=float(out["sched_it_mwh"][i]),
+            twin_it_mwh=float(out["it_mwh"][i]),
             # board-side carbon delta vs the rho = 0 twin: the schedule
-            # freedom the lo-floor costs (work shifted out of green hours)
-            withhold_co2_t=(float(out["co2_it_t"][i] - out["co2_it_t"][j])
+            # freedom the band's feasibility floor costs (work shifted out
+            # of green hours)
+            withhold_co2_t=(float(out["sched_co2_it_t"][i]
+                                  - out["sched_co2_it_t"][j])
                             if j is not None else 0.0),
-            withhold_fac_mwh=(float(out["fac_mwh"][i] - out["fac_mwh"][j])
+            withhold_fac_mwh=(float(out["sched_fac_mwh"][i]
+                                    - out["sched_fac_mwh"][j])
                               if j is not None else 0.0),
         ))
     for prod in sorted({r["product"] for r in rows}):
@@ -274,11 +286,15 @@ def run(fast: bool = False, reps: int = 2) -> dict:
         emit(f"e9.withhold_co2_t.rho_{rho:.2f}",
              round(float(np.mean([r["withhold_co2_t"] for r in sel])), 3),
              "E8-side board carbon cost of the withheld band")
+
+    # -- Tier-3 price feedback (rho chosen by the grid search) -------------
+    tier3_rows = price_aware_points(fast)
+
     save_json("e9_reserve.json", dict(
         n_scenarios=batch.n, scenario_days=scenario_days,
-        vmap_scen_per_s=batch.n / t_vmap, loop_scen_per_s=batch.n / t_loop,
-        speedup_x=t_loop / t_vmap, parity=par, rows=rows))
-    return dict(rows=rows, parity=par)
+        vmap_scen_per_s=batch.n / t_engine, loop_scen_per_s=batch.n / t_loop,
+        parity=par, rows=rows, tier3_points=tier3_rows))
+    return dict(rows=rows, parity=par, tier3_points=tier3_rows)
 
 
 if __name__ == "__main__":

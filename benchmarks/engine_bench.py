@@ -1,0 +1,186 @@
+"""`engine`: the fused single-pass rollout vs the separate per-tier passes.
+
+The ROADMAP flagged two linked bottlenecks in the seconds tier: the e9
+detection scan is latency-bound on CPU (a whole extra pass over the
+86 400-second axis just to find threshold crossings), and summary-only
+sweeps through ``run_twin_batch`` expand every hourly table to (N, T)
+per-second inputs, materialise the full ``(N, T, H)`` metric stacks, and
+reduce them per-scenario in host numpy.
+
+``engine_rollout(reduce="summary")`` removes all three: the reserve state
+machine rides inside the twin's 1 Hz tick (ONE pass over seconds), the
+hourly tables are gathered per tick (no per-second input expansion), and
+the summary lives in the scan carry (no ``(N, T, H)`` stacks, no host
+reduction loop).  This benchmark replays the full E9 batch
+(288 scenario-days) both ways on identical scenarios and **asserts** the
+fused engine beats the status-quo composition --
+
+    per-sweep input expansion (the (N, T)/(N, T, H) arrays
+                               prepare_scenario + stack_scenarios build)
+  + run_twin_batch            (vmap(scan) + (N, T, H) stacks +
+                               per-scenario numpy summaries)
+  + reserve_replay_batch      (the separate detection vmap(scan))
+
+-- by ``MIN_SPEEDUP_X``.  CI runs the same gate in ``--fast`` mode
+(``FAST_MIN_SPEEDUP_X``).
+
+Measured on the 2-core reference container (best-of-2, solo): at
+288 scenario-days fused 54.3 s vs separate 72.2 s (1.33x; the twin scan
+itself is ~62 s of the separate total -- the fused tick walks the
+seconds axis once AND skips the per-second input expansion); at the CI
+smoke scale (288 scenario-hours) 2.0x, because the O(N) host-side
+expansion/stacking/summary work the engine deletes dominates short
+horizons.  The floors below sit ~20 % under the measured ratios so the
+gate trips on a real regression (e.g. an op-count blow-up in the fused
+tick), not on CI noise.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, save_json
+from benchmarks.e9_reserve import build_e9_batch, engine_config, \
+    synthesize_inputs
+import repro.core.engine as engine_lib
+import repro.core.reserve as reserve
+import repro.core.twin as twin_lib
+from repro.grid import frequency, signals
+from repro.grid.scenarios import build_scenario_batch, frequency_seeds, \
+    product_specs
+
+MIN_SPEEDUP_X = 1.1         # full run: 288 scenario-days (measured 1.33x)
+FAST_MIN_SPEEDUP_X = 1.5    # CI smoke: 288 scenario-hours (measured 2.0x)
+
+
+def bench_batch(fast: bool = False):
+    """Full mode: the E9 batch itself (288 scenario-days).  Fast mode
+    keeps the full 288-scenario WIDTH (the per-scenario host work is the
+    O(N) cost the fused reducer deletes) but shrinks the horizon to one
+    hour so CI walks 288 scenario-hours, not -days."""
+    if not fast:
+        return build_e9_batch(False)[1]
+    from repro.grid.signals import COUNTRY_ORDER
+    specs = product_specs(countries=tuple(COUNTRY_ORDER), seeds=(0, 1, 2),
+                          horizon_h=1, products=("FFR", "FCR-D"),
+                          reserve_rhos=(0.0, 0.1, 0.2, 0.3),
+                          event_seeds=(0, 1))
+    return build_scenario_batch(specs)
+
+
+def _event_lists(batch, cfg):
+    """Per-scenario (t0, nadir, recovery) tuples from the synthesised
+    frequency events (shared data prep, outside the timed region)."""
+    T = int(batch.h_max) * 3600
+    _, events = frequency.synthesize_frequency_batch(
+        frequency_seeds(batch), batch.product_idx, n_seconds=T,
+        events_per_day=cfg.events_per_day, max_events=cfg.max_freq_events)
+    valid = np.asarray(events.valid)
+    t0 = np.asarray(events.t0_s)
+    nadir = np.asarray(events.nadir_hz)
+    rec = np.asarray(events.recovery_s)
+    return [[(float(t0[i, k]), float(nadir[i, k]), float(rec[i, k]))
+             for k in np.flatnonzero(valid[i])] for i in range(batch.n)]
+
+
+def _separate_sweep(cfg, batch, loads, freq, mu_h, rho_h, ev_lists, grids,
+                    scan_keys):
+    """One status-quo sweep: the per-sweep input expansion
+    (prepare_scenario/stack_scenarios' job -- the Tier-3 schedule changes
+    every sweep, so this is paid every time), the twin batch with host
+    summaries, and the separate reserve detection pass."""
+    T = int(batch.h_max) * 3600
+    hour_idx = np.minimum(np.arange(T) // 3600, int(batch.h_max) - 1)
+    mu_sec = mu_h[:, hour_idx]
+    rho_sec = rho_h[:, hour_idx]
+    ta_sec = np.asarray(batch.t_amb)[:, hour_idx]
+    scens = []
+    for i in range(batch.n):
+        ffr = np.zeros(T, bool)
+        for (t_e, _n, r) in ev_lists[i]:
+            ffr[int(t_e): min(int(t_e) + int(r), T)] = True
+        mu_i = jnp.asarray(mu_sec[i])
+        inputs = twin_lib.TwinInputs(
+            loads=loads[i] * mu_i[:, None] / 0.9,
+            mu_sec=mu_i, rho_sec=jnp.asarray(rho_sec[i]),
+            ffr_sec=jnp.asarray(ffr), t_amb_sec=jnp.asarray(ta_sec[i]),
+            key=scan_keys[i])
+        scens.append(twin_lib.TwinScenario(
+            inputs=inputs, grid=grids[i], events=ev_lists[i],
+            mu_h=mu_h[i], rho_h=rho_h[i], seed=int(batch.seed[i])))
+    tw = cfg.twin_config(T)
+    _, summaries = twin_lib.run_twin_batch(tw, scens)
+    res = reserve.reserve_replay_batch(
+        freq, jnp.asarray(mu_h), batch.t_amb, batch.hours * 3600,
+        batch.product_idx, batch.reserve_rho, batch.mw, batch.pue_design,
+        e_max=cfg.e_max)
+    jax.block_until_ready(res["n_events"])
+    return summaries, res
+
+
+def run(fast: bool = False, reps: int = 2) -> dict:
+    batch = bench_batch(fast)
+    cfg = engine_config(fast)
+    freq, loads = synthesize_inputs(cfg, batch)
+    scenario_days = batch.n * int(batch.h_max) / 24.0
+    emit("engine.n_scenarios", batch.n, "")
+    emit("engine.scenario_days", round(scenario_days, 2),
+         "1 Hz seconds replayed per pass")
+
+    def timed(fn, sync):
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            sync(fn())
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    # -- fused single pass: twin + reserve + energy + settlement, summary
+    #    aggregates only (no per-second expansion, no (N,T,H) stacks) ------
+    fused = lambda: engine_lib.engine_rollout(cfg, batch, freq=freq,  # noqa: E731
+                                              loads=loads)
+    out = fused()                            # compile + warm
+    jax.block_until_ready(out["net_eur"])
+    t_fused = timed(fused, lambda r: jax.block_until_ready(r["net_eur"]))
+
+    # -- the status-quo composition on identical scenarios -----------------
+    mu_h = np.asarray(out["mu_h"])
+    rho_h = np.asarray(out["rho_h"])
+    ev_lists = _event_lists(batch, cfg)
+    grids = []
+    for i in range(batch.n):
+        sel = batch.select(i)
+        grids.append(signals.GridSignals(country=sel["spec"].country,
+                                         ci=sel["ci"], t_amb=sel["t_amb"]))
+    _, scan_keys = engine_lib.scenario_keys(batch)
+    separate = lambda: _separate_sweep(  # noqa: E731
+        cfg, batch, loads, freq, mu_h, rho_h, ev_lists, grids, scan_keys)
+    separate()                               # compile + warm
+    t_sep = timed(separate, lambda r: r)
+
+    speedup = t_sep / t_fused
+    emit("engine.fused_scen_per_s", round(batch.n / t_fused, 2),
+         "ONE fused pass: twin + reserve + energy + settlement")
+    emit("engine.separate_scen_per_s", round(batch.n / t_sep, 2),
+         "expansion + run_twin_batch + reserve_replay_batch")
+    emit("engine.fused_s", round(t_fused, 2), "")
+    emit("engine.separate_s", round(t_sep, 2), "")
+    emit("engine.fused_vs_separate_x", round(speedup, 2),
+         f"gate: >= {FAST_MIN_SPEEDUP_X if fast else MIN_SPEEDUP_X}x")
+
+    floor = FAST_MIN_SPEEDUP_X if fast else MIN_SPEEDUP_X
+    res = dict(n_scenarios=batch.n, scenario_days=scenario_days,
+               t_fused=t_fused, t_separate=t_sep,
+               speedup_x=speedup, floor=floor)
+    save_json("engine_bench.json", res)
+    assert speedup >= floor, (
+        f"fused engine regression: {speedup:.2f}x < {floor}x "
+        f"(fused {t_fused:.2f}s vs separate {t_sep:.2f}s)")
+    return res
+
+
+if __name__ == "__main__":
+    run()

@@ -25,7 +25,8 @@ def main(argv=None) -> int:
 
     from benchmarks import (cluster_24h, e1_calibration, e2_step_response,
                             e3_ar4, e4_closed_loop, e7_fr_latency,
-                            e8_multicountry, e9_reserve, roofline)
+                            e8_multicountry, e9_reserve, engine_bench,
+                            roofline)
     from benchmarks.common import emit
 
     suite = [
@@ -38,6 +39,7 @@ def main(argv=None) -> int:
         ("e8_batched",
          lambda: e8_multicountry.run_batched_bench(fast=args.fast)),
         ("e9", lambda: e9_reserve.run(fast=args.fast)),
+        ("engine", lambda: engine_bench.run(fast=args.fast)),
         ("fig4", lambda: cluster_24h.run(fast=args.fast)),
         ("roofline", lambda: roofline.emit_table()),
     ]

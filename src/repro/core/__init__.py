@@ -1,5 +1,12 @@
 """GridPilot core: the paper's primary contribution in JAX.
 
+The primary simulation surface is the unified rollout engine
+(``repro.core.engine``): EngineConfig -> engine_init -> engine_rollout ->
+settlement, ONE ``jit(vmap(lax.scan))`` over a ScenarioBatch composing
+Tier-3 operating-point selection, the hourly schedule accounting, the
+twin's 1 Hz physics, and the reserve detection/verification.
+
+The per-tier modules remain importable as internals and building blocks:
 Tier-1 (pid), Tier-2 (ar4), Tier-3 (tier3), safety island (island),
 four-component PUE model (pue), Algorithm 1 dispatch (dispatch), the V100
 power/thermal plant (plant), the multiscale digital twin (twin), the
@@ -7,11 +14,16 @@ reserve-market replay & settlement engine (reserve), and the
 trainer-facing composition (controller).
 """
 from repro.core.controller import GridPilot, PowerPlan, plan_from_operating_point
+from repro.core.engine import (EngineConfig, EngineParams, EngineState,
+                               engine_init, engine_rollout, engine_step,
+                               summarize_rollout)
 from repro.core.plant import PlantState, init_plant, plant_step, power_model
 from repro.core.pid import (PIDState, init_pid, pid_step, pid_rollout,
                             pid_rollout_batch)
 from repro.core.ar4 import RLSState, init_rls, predict, rls_update
-from repro.core.tier3 import Tier3Selector, OperatingPoint, q_ffr, cap_table
+from repro.core.tier3 import (Tier3Selector, OperatingPoint, cap_table,
+                              event_verdict, greenness_from_ci, q_ffr,
+                              revenue_score, select_operating_points)
 # NB: the `pue` *function* is exported as `instantaneous_pue` so the package
 # attribute `repro.core.pue` keeps pointing at the submodule.
 from repro.core.pue import pue as instantaneous_pue
@@ -19,7 +31,7 @@ from repro.core.pue import facility_power, free_cooling_fraction
 from repro.core.island import SafetyIsland, PythonSupervisor
 from repro.core.dispatch import (GridPilotDispatcher, Job, replay_schedule,
                                  schedule_from_threshold, signal_thresholds)
-from repro.core.reserve import (ReserveEvents, event_verdict, reserve_replay,
+from repro.core.reserve import (ReserveEvents, reserve_replay,
                                 reserve_replay_batch,
                                 reserve_replay_reference, settle_reserve)
 from repro.core.twin import (TwinConfig, TwinInputs, TwinScenario,
@@ -28,16 +40,23 @@ from repro.core.twin import (TwinConfig, TwinInputs, TwinScenario,
                              summarize_twin)
 
 __all__ = [
+    # unified rollout engine (the primary surface)
+    "EngineConfig", "EngineParams", "EngineState",
+    "engine_init", "engine_step", "engine_rollout", "summarize_rollout",
+    # trainer-facing composition
     "GridPilot", "PowerPlan", "plan_from_operating_point",
+    # per-tier building blocks (internal entry points)
     "PlantState", "init_plant", "plant_step", "power_model",
     "PIDState", "init_pid", "pid_step", "pid_rollout", "pid_rollout_batch",
     "RLSState", "init_rls", "predict", "rls_update",
     "Tier3Selector", "OperatingPoint", "q_ffr", "cap_table",
+    "event_verdict", "greenness_from_ci", "revenue_score",
+    "select_operating_points",
     "instantaneous_pue", "facility_power", "free_cooling_fraction",
     "SafetyIsland", "PythonSupervisor",
     "GridPilotDispatcher", "Job", "replay_schedule",
     "schedule_from_threshold", "signal_thresholds",
-    "ReserveEvents", "event_verdict", "reserve_replay",
+    "ReserveEvents", "reserve_replay",
     "reserve_replay_batch", "reserve_replay_reference", "settle_reserve",
     "TwinConfig", "TwinInputs", "TwinScenario", "net_co2_decomposition",
     "prepare_scenario", "run_twin", "run_twin_batch", "stack_scenarios",

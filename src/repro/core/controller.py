@@ -73,6 +73,8 @@ class GridPilot:
                  *, chip_tdp: float = plant_lib.TDP,
                  pue_aware: bool = True,
                  pue_design: float = pue_lib.PUE_DESIGN,
+                 price_aware: bool = False,
+                 product: str = "FFR",
                  island_port: int = island_lib.DEFAULT_PORT,
                  start_island: bool = True):
         self.n_hosts = n_hosts
@@ -80,8 +82,13 @@ class GridPilot:
         self.n_chips = n_hosts * chips_per_host
         self.chip_tdp = chip_tdp
         self.design_it_w = self.n_chips * chip_tdp
+        # price_aware feeds the reserve-settlement revenue term back into
+        # the Tier-3 grid search (the engine's closed Tier-3 loop); all
+        # selector instances share one module-level jitted search.
         self.selector = tier3_lib.Tier3Selector(
-            pue_aware=pue_aware, pue_design=pue_design)
+            pue_aware=pue_aware, pue_design=pue_design,
+            w_rev=tier3_lib.W_REV_DEFAULT if price_aware else 0.0,
+            product=product)
 
         # island: (mu x rho) grid flattened to rows of per-chip caps
         per_host = tier3_lib.cap_table(

@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import warnings
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
@@ -92,10 +93,14 @@ def replay_schedule(mu, ci, t_amb, mask, *, pue_design,
       co2_it    board-side CO2 integral   (IT x CI)
       co2       meter-side CO2 integral   (facility x CI)
       cfe_mu    utilisation placed in green hours (ci <= green_ci)
+      cfe_fac   metered draw placed in green hours (the dispatcher's CFE
+                numerator; same units as fac)
 
     Padded hours (mask == 0) contribute nothing.  This is the data-plane
     half of Algorithm 1's per-hour accounting, extracted so the batched
-    scenario sweep replays it without the Python scheduler loop.
+    scenario sweep AND the hourly Python dispatcher (whose ``run`` now
+    delegates its energy integration here) replay it without per-hour
+    Python arithmetic.
     """
     mu = jnp.asarray(mu, jnp.float32)
     batch_shape = mu.shape[:-1]
@@ -104,29 +109,32 @@ def replay_schedule(mu, ci, t_amb, mask, *, pue_design,
                         jnp.float32)
 
     def hour(carry, xs):
-        it, fac, co2_it, co2, cfe = carry
+        it, fac, co2_it, co2, cfe, cfe_f = carry
         mu_h, ci_h, ta_h, m = xs           # mu_h: batch_shape; rest scalar
         load = jnp.clip(mu_h, 0.05, 1.0)
         p = pue_lib.pue(load, ta_h, pue_design=pue_design)
         it_w = load * design_w * m
         fac_w = load * p * design_w * m
+        is_green = ci_h <= green
         return (
             it + it_w,
             fac + fac_w,
             co2_it + it_w * ci_h,
             co2 + fac_w * ci_h,
-            cfe + jnp.where(ci_h <= green, mu_h, 0.0) * m,
+            cfe + jnp.where(is_green, mu_h, 0.0) * m,
+            cfe_f + jnp.where(is_green, fac_w, 0.0),
         ), None
 
     # unroll: the body is a handful of elementwise ops, so the while-loop
     # step overhead dominates on CPU; unrolling trades a slightly larger
     # program for ~an order of magnitude fewer loop iterations.
-    (it, fac, co2_it, co2, cfe), _ = jax.lax.scan(
-        hour, (zeros, zeros, zeros, zeros, zeros),
+    (it, fac, co2_it, co2, cfe, cfe_f), _ = jax.lax.scan(
+        hour, (zeros, zeros, zeros, zeros, zeros, zeros),
         (jnp.moveaxis(mu, -1, 0), ci, t_amb, mask),
         unroll=24,
     )
-    return dict(it=it, fac=fac, co2_it=co2_it, co2=co2, cfe_mu=cfe)
+    return dict(it=it, fac=fac, co2_it=co2_it, co2=co2, cfe_mu=cfe,
+                cfe_fac=cfe_f)
 
 
 @dataclass
@@ -232,13 +240,33 @@ class GridPilotDispatcher:
             return need
         return 0
 
+    # kwargs that used to toggle the (now deleted) inline per-hour
+    # power/carbon integration; accepted-and-warned for one deprecation
+    # cycle, the accounting is always delegated to `replay_schedule`.
+    _DEPRECATED_RUN_KWARGS = ("integrate_energy", "integrate_carbon",
+                              "inline_accounting")
+
     def run(self, jobs: list[Job], horizon_h: Optional[int] = None,
-            reserve_rho: float = 0.0) -> DispatchStats:
+            reserve_rho: float = 0.0, **deprecated) -> DispatchStats:
         """Replay the trace.  Returns aggregate stats.
 
         reserve_rho caps usable nodes at (1 - rho) of the fleet -- the FFR
         band withheld by Tier-3 (instantly sheddable duty-cycled capacity).
+
+        The scheduler loop is control plane (Python); the energy/carbon
+        accounting it used to integrate inline per hour is data plane and
+        is delegated to :func:`replay_schedule` over the realised
+        utilisation trace -- one jitted scan, the same integrator the
+        batched sweep and the unified engine use.
         """
+        for k in deprecated:
+            if k not in self._DEPRECATED_RUN_KWARGS:
+                raise TypeError(f"run() got an unexpected keyword {k!r}")
+            warnings.warn(
+                f"GridPilotDispatcher.run({k}=...) is deprecated and "
+                "ignored: the inline power/carbon integration was removed; "
+                "accounting is always delegated to replay_schedule.",
+                DeprecationWarning, stacklevel=2)
         horizon = int(horizon_h if horizon_h is not None else len(self.ci))
         horizon = min(horizon, len(self.ci))
         pending: list[tuple] = []   # heap by (submit, jid)
@@ -307,12 +335,12 @@ class GridPilotDispatcher:
             pending = rest
             heapq.heapify(pending)
 
-            # power/carbon integration for this hour
+            # realised utilisation for this hour (job progress stays in the
+            # control plane; the energy integral is delegated below)
             cap_factor = HIGH_SIGMA_CAP if sigma_hi else 1.0
             it_w = 0.0
             for j in running:
-                w = j.nodes * self.node_power_w * cap_factor
-                it_w += w
+                it_w += j.nodes * self.node_power_w * cap_factor
                 # capped jobs progress at ~96 % rate (paper: capping running
                 # jobs delivers savings "without adding wait time")
                 rate = 0.96 if sigma_hi else 1.0
@@ -322,20 +350,36 @@ class GridPilotDispatcher:
             it_w += (self.total_nodes - busy) * self.node_power_w * 0.08  # idle
             load = it_w / self.design_it_w
             load_est = 0.5 * load_est + 0.5 * load
-            p = float(pue_lib.pue(max(load, 0.05), self.t_amb[h],
-                                  pue_design=self.pue_design))
-            fac_w = it_w * p
             stats.util_trace.append(load)
-            stats.pue_trace.append(p)
-            e_it = it_w / 1e6            # MWh for one hour
-            e_fac = fac_w / 1e6
-            stats.it_energy_mwh += e_it
-            stats.facility_energy_mwh += e_fac
-            stats.co2_t += e_fac * self.ci[h] / 1000.0
-            stats.co2_it_t += e_it * self.ci[h] / 1000.0
-            if self.ci[h] <= self.green_ci:
-                stats.cfe_num += e_fac
+
+        self._account(stats, horizon)
         return stats
+
+    def _account(self, stats: DispatchStats, horizon: int) -> None:
+        """Power/carbon accounting over the realised utilisation trace.
+
+        One `replay_schedule` scan (the shared data-plane integrator)
+        replaces the per-hour inline arithmetic `run` used to carry.
+        """
+        mu = np.asarray(stats.util_trace, np.float32)
+        if mu.size == 0:
+            return
+        ci = self.ci[:horizon].astype(np.float32)
+        t_amb = self.t_amb[:horizon].astype(np.float32)
+        mask = np.ones_like(mu)
+        tot = {k: float(v) for k, v in replay_schedule(
+            mu, ci, t_amb, mask, pue_design=self.pue_design,
+            green_ci=float(self.green_ci),
+            design_w=self.design_it_w).items()}
+        stats.it_energy_mwh = tot["it"] / 1e6        # W*h -> MWh
+        stats.facility_energy_mwh = tot["fac"] / 1e6
+        stats.co2_t = tot["co2"] / 1e9               # W*h * g/kWh -> t
+        stats.co2_it_t = tot["co2_it"] / 1e9
+        stats.cfe_num = tot["cfe_fac"] / 1e6
+        stats.pue_trace = [
+            float(v) for v in np.asarray(pue_lib.pue(
+                np.clip(mu, 0.05, 1.0), t_amb, pue_design=self.pue_design))
+        ]
 
     def cfe(self, stats: DispatchStats) -> float:
         return stats.cfe_num / max(stats.facility_energy_mwh, 1e-9)

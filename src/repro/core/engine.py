@@ -1,0 +1,468 @@
+"""Unified three-tier rollout engine: ONE ``jit(vmap(lax.scan))`` per sweep.
+
+Before this module the three tiers were three hand-stitched entry points:
+the hourly schedule replayed through ``dispatch.replay_schedule``, the
+twin's 1 Hz physics through ``twin.run_twin_batch``, and the reserve
+detection/verification through ``reserve.reserve_replay_batch`` -- with
+reserve verdicts evaluated against the schedule's quasi-static ``mu``
+rather than the power the twin actually produced.  The engine composes
+all of them into one functional, pytree-based simulation API:
+
+  :class:`EngineConfig`   static fleet/physics/search knobs (hashable),
+  :class:`EngineState`    the scan carry: Tier-2 RLS + plant + reserve
+                          detection state + streaming aggregates,
+  :func:`engine_init`     EngineConfig -> initial EngineState,
+  :func:`engine_step`     one fused 1 Hz tick: reserve detection, duty
+                          shed, Tier-2 predict/rebalance, plant, meter,
+  :func:`engine_rollout`  ScenarioBatch -> one compiled pass: Tier-3
+                          grid search (optionally price-aware), hourly
+                          energy/carbon accounting, frequency synthesis,
+                          the fused per-second scan, per-event verdicts,
+                          and settlement.
+
+Reserve delivery verdicts come from the twin's RLS-tracked per-second IT
+power (the load the meter would actually see at the trigger second), not
+the schedule's quasi-static ``mu``; the quasi-static verdicts are still
+produced (``events_sched``) and match ``reserve_replay_batch`` exactly,
+so the two diverge precisely when Tier-2 tracking error is nonzero.
+
+``reduce="summary"`` keeps only running aggregates in the scan carry --
+no ``(N, T, H)`` metric stacks -- so thousand-scenario sweeps scale in
+batch size, not horizon.  ``reduce="full"`` additionally stacks the
+per-second :class:`~repro.core.twin.TwinMetrics` (the parity surface the
+tests pin against the hand-stitched composition).
+
+The scan carry is a flat pytree and every per-scenario input carries a
+leading batch axis, so the next scaling step (``shard_map`` over the
+scenario axis with donated carries) is a one-line wrapper around
+``_engine_seconds_jit``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.core.dispatch as dispatch
+import repro.core.plant as plant_lib
+import repro.core.reserve as reserve
+import repro.core.tier3 as tier3_lib
+import repro.core.twin as twin_lib
+import repro.grid.frequency as frequency
+import repro.grid.markets as markets
+from repro.grid.scenarios import ScenarioBatch, frequency_seeds, \
+    masked_quantile
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    """Static knobs of the unified rollout (hashable: jit static arg).
+
+    The simulated fleet is ``n_hosts x chips_per_host`` at ``chip_tdp``;
+    per-scenario site size arrives traced via ``ScenarioBatch.mw`` and
+    scales the fleet's normalised load to site MW, so one compiled rollout
+    serves every MW level in the batch.
+    """
+
+    n_hosts: int = 4
+    chips_per_host: int = 2
+    chip_tdp: float = plant_lib.TDP
+    pue_aware: bool = True
+    # Tier-3: "batch" holds the committed band at ScenarioBatch.reserve_rho
+    # (the band was sold ahead of time; only mu is free), "tier3" lets the
+    # grid search choose (mu, rho) per hour.
+    rho_mode: str = "batch"
+    # settlement-revenue feedback into the grid search (price-aware points)
+    price_aware: bool = False
+    w_rev: float = tier3_lib.W_REV_DEFAULT
+    # frequency synthesis / reserve replay
+    events_per_day: float = tier3_lib.EVENTS_PER_DAY_DEFAULT
+    e_max: int = 24
+    max_freq_events: int = 64
+    # seconds-tier toggle: False runs the hourly tiers only (Tier-3 search
+    # + schedule energy accounting), the E8 configuration
+    with_seconds: bool = True
+    warmup_s: int = 60          # RLS warm-up excluded from error metrics
+    # scan unroll.  1 measures fastest on CPU for this op-heavy body: the
+    # tick is dispatch-latency bound, and unrolling multiplies the body's
+    # op count without enabling extra fusion across the RLS/percentile
+    # barriers (unlike the tiny detection-only scan, where unroll=8 wins).
+    unroll: int = 1
+
+    def __post_init__(self):
+        if self.rho_mode not in ("batch", "tier3"):
+            raise ValueError(
+                f"rho_mode must be 'batch' or 'tier3', got {self.rho_mode!r}")
+
+    @property
+    def n_chips(self) -> int:
+        return self.n_hosts * self.chips_per_host
+
+    @property
+    def design_it_w(self) -> float:
+        return self.n_chips * self.chip_tdp
+
+    def twin_config(self, seconds: int) -> twin_lib.TwinConfig:
+        return twin_lib.TwinConfig(
+            n_hosts=self.n_hosts, chips_per_host=self.chips_per_host,
+            chip_tdp=self.chip_tdp, pue_aware=self.pue_aware,
+            seconds=seconds)
+
+
+class EngineAccum(NamedTuple):
+    """Streaming aggregates carried through the scan (reduce="summary")."""
+
+    n_s: jax.Array          # valid (in-horizon) seconds
+    n_warm: jax.Array       # valid seconds past the RLS warm-up
+    err: jax.Array          # sum of per-tick mean |AR4 err| / design_host
+    track: jax.Array        # sum of tracking_err past warm-up
+    load: jax.Array         # sum of cluster L = it / design (per-unit)
+    fac: jax.Array          # sum of L * PUE(L) (per-unit meter draw)
+    chip_mean: jax.Array    # sum of per-tick chip power mean (W)
+    chip_p95: jax.Array     # sum of per-tick chip power p95 (W)
+    shed_s: jax.Array       # seconds spent shedding for the reserve
+    shed_it: jax.Array      # sum of armed rho_it over shed seconds
+
+
+class EngineState(NamedTuple):
+    """The fused scan carry: twin + reserve detection + aggregates."""
+
+    rls: object             # ar4.RLSState
+    chip_power: jax.Array   # (H, C) W
+    caps: jax.Array         # (H, C) W
+    key: jax.Array          # plant-noise PRNG key
+    last_load: jax.Array    # previous second's cluster L (pre-trigger power)
+    in_event: jax.Array     # reserve detection: inside a held activation
+    hold: jax.Array         # reserve detection: sustain countdown (s)
+    acc: EngineAccum
+
+
+class EngineParams(NamedTuple):
+    """Per-scenario traced tables the step gathers from by hour."""
+
+    mu_h: jax.Array         # (Hm,) operating fraction
+    rho_h: jax.Array        # (Hm,) committed band
+    t_amb_h: jax.Array      # (Hm,) ambient degC
+    rho_it_h: jax.Array     # (Hm,) armed IT-side band (quasi-static table)
+    min_dur_i: jax.Array    # scalar int32 product sustain window
+    pue_design: jax.Array   # scalar
+
+
+class EngineSecond(NamedTuple):
+    """Per-second scan outputs needed beyond the carry."""
+
+    trig: jax.Array         # bool: a reserve event triggered this second
+    shed: jax.Array         # bool: the reserve shed is being served
+    load: jax.Array         # cluster L at the START of the second (pre-shed)
+
+
+def engine_init(cfg: EngineConfig, key) -> EngineState:
+    """Initial carry for one scenario's fused scan."""
+    rls, chip_power, caps, key = twin_lib.twin_carry_init(
+        cfg.n_hosts, cfg.chips_per_host, key)
+    in_ev, hold = reserve.detection_init()
+    z = jnp.zeros((), jnp.float32)
+    return EngineState(
+        rls=rls, chip_power=chip_power, caps=caps, key=key,
+        last_load=jnp.asarray(plant_lib.P_IDLE / cfg.chip_tdp, jnp.float32),
+        in_event=in_ev, hold=hold,
+        acc=EngineAccum(*([z] * len(EngineAccum._fields))),
+    )
+
+
+def engine_step(cfg: EngineConfig, params: EngineParams, state: EngineState,
+                xs):
+    """One fused 1 Hz tick.
+
+    xs = (base_load (H,), below bool, in_hor bool, t int32): the per-host
+    demand archetype row (unscaled), the frequency-below-trigger flag, the
+    ragged-horizon gate, and the second index.  Order of operations:
+
+      1. reserve detection state machine (identical to the standalone
+         ``reserve.reserve_replay`` scan -- event times match exactly),
+      2. the twin tick with the detected shed driving the FFR duty shed
+         (the activation actually takes power out of the plant),
+      3. streaming aggregate update.
+
+    Returns (state, (EngineSecond, TwinMetrics)).
+    """
+    base_load, below, in_hor, t = xs
+    h_max = params.mu_h.shape[-1]
+    hour = jnp.minimum(t // 3600, h_max - 1)
+    mu = params.mu_h[hour]
+    rho = params.rho_h[hour]
+    t_amb = params.t_amb_h[hour]
+
+    (in_ev, hold), trig, shed = reserve.detection_step(
+        (state.in_event, state.hold), below, in_hor, params.min_dur_i)
+
+    load_h = base_load * mu / 0.9
+    carry = (state.rls, state.chip_power, state.caps, state.key)
+    (rls, chip_power, caps, key), m = twin_lib.twin_tick(
+        cfg.n_hosts, cfg.chips_per_host, cfg.chip_tdp, params.pue_design,
+        carry, load_h, mu, rho, shed, t_amb)
+
+    L = m.it_power / cfg.design_it_w
+    g = in_hor.astype(jnp.float32)
+    w = g * (t >= cfg.warmup_s)
+    design_host = cfg.chips_per_host * cfg.chip_tdp
+    a = state.acc
+    acc = EngineAccum(
+        n_s=a.n_s + g,
+        n_warm=a.n_warm + w,
+        err=a.err + w * jnp.mean(m.ar4_abs_err) / design_host,
+        track=a.track + w * m.tracking_err,
+        load=a.load + g * L,
+        fac=a.fac + g * m.facility_power / cfg.design_it_w,
+        chip_mean=a.chip_mean + g * m.chip_power_mean,
+        chip_p95=a.chip_p95 + g * m.chip_power_p95,
+        shed_s=a.shed_s + shed.astype(jnp.float32),
+        shed_it=a.shed_it + params.rho_it_h[hour] * shed,
+    )
+    sec = EngineSecond(trig=trig, shed=shed, load=state.last_load)
+    new = EngineState(rls=rls, chip_power=chip_power, caps=caps, key=key,
+                      last_load=L, in_event=in_ev, hold=hold, acc=acc)
+    return new, (sec, m)
+
+
+# ---------------------------------------------------------------------------
+# Per-scenario rollout (vmapped below)
+# ---------------------------------------------------------------------------
+
+
+def _hourly_one(cfg: EngineConfig, ci, t_amb, mask, mw, pue_design,
+                product_idx, rho_batch) -> dict:
+    """Tier-3 grid search + hourly schedule energy/carbon accounting."""
+    green = tier3_lib.greenness_from_ci(ci, mask)
+    w_rev = cfg.w_rev if cfg.price_aware else 0.0
+    op = tier3_lib.select_operating_points(
+        green, t_amb, pue_aware=cfg.pue_aware, pue_design=pue_design,
+        weights=(tier3_lib.W_FFR, tier3_lib.W_CFE, w_rev),
+        product_idx=product_idx, events_per_day=cfg.events_per_day,
+        rho_fixed=rho_batch, use_revenue=cfg.price_aware,
+        fix_rho=(cfg.rho_mode == "batch"))
+    mu_h = jnp.where(mask > 0, op.mu, 0.0)
+    rho_h = jnp.where(mask > 0, op.rho, 0.0)
+    green_ci = masked_quantile(ci, mask, 50.0)
+    energy = dispatch.replay_schedule(mu_h, ci, t_amb, mask,
+                                      pue_design=pue_design,
+                                      green_ci=green_ci, design_w=mw)
+    hv = jnp.maximum(jnp.sum(mask), 1.0)
+    return dict(
+        mu_h=mu_h, rho_h=rho_h,
+        mean_mu=jnp.sum(mu_h * mask) / hv,
+        mean_rho=jnp.sum(rho_h * mask) / hv,
+        sched_it_mwh=energy["it"],
+        sched_fac_mwh=energy["fac"],
+        sched_co2_t=energy["co2"] / 1000.0,
+        sched_co2_it_t=energy["co2_it"] / 1000.0,
+        sched_cfe_fac_mwh=energy["cfe_fac"],
+        cfe_mu=energy["cfe_mu"],
+    )
+
+
+def _rollout_one(cfg: EngineConfig, reduce: str, ci, t_amb, mask, hours,
+                 mw, pue_design, product_idx, rho_batch, freq, base_loads,
+                 key) -> dict:
+    out = _hourly_one(cfg, ci, t_amb, mask, mw, pue_design, product_idx,
+                      rho_batch)
+    mu_h, rho_h = out["mu_h"], out["rho_h"]
+    h_max = ci.shape[-1]
+    T = freq.shape[-1]
+    valid_s = jnp.asarray(hours, jnp.int32) * 3600
+
+    # hoisted quasi-static activation physics (the reserve_replay tables):
+    # used for the armed-band energy accounting and the schedule-side
+    # verdicts the parity tests pin against reserve_replay_batch
+    vh = tier3_lib.event_verdict(mu_h, t_amb, rho_h, product_idx,
+                                 pue_design, pue_aware=cfg.pue_aware)
+    min_dur_f = jnp.asarray(markets.MIN_DURATION_S)[product_idx]
+    trig_hz = jnp.asarray(markets.TRIGGER_HZ)[product_idx]
+
+    params = EngineParams(mu_h=mu_h, rho_h=rho_h, t_amb_h=t_amb,
+                          rho_it_h=vh["rho_it"],
+                          min_dur_i=min_dur_f.astype(jnp.int32),
+                          pue_design=pue_design)
+    below_t = freq < trig_hz
+    in_hor_t = jnp.arange(T, dtype=jnp.int32) < valid_s
+    xs = (base_loads, below_t, in_hor_t, jnp.arange(T, dtype=jnp.int32))
+
+    def body(state, x):
+        state, (sec, m) = engine_step(cfg, params, state, x)
+        return state, ((sec, m) if reduce == "full" else sec)
+
+    state, ys = jax.lax.scan(body, engine_init(cfg, key), xs,
+                             unroll=cfg.unroll)
+    sec, metrics = ys if reduce == "full" else (ys, None)
+
+    # --- per-event verdicts -------------------------------------------------
+    t_ev, valid = reserve.event_times(sec.trig, cfg.e_max)
+    hour_ev = jnp.minimum(t_ev // 3600, h_max - 1)
+    # schedule-side (quasi-static) verdicts: exact reserve_replay parity
+    vq = {k: x[hour_ev] for k, x in vh.items()}
+    events_sched = reserve.assemble_events(vq, t_ev, valid, min_dur_f,
+                                           valid_s, mw)
+    # twin-coupled verdicts: the pre-trigger operating point is the twin's
+    # RLS-tracked per-second IT power, not the schedule's quasi-static mu
+    l_ev = sec.load[jnp.clip(t_ev, 0, T - 1)]
+    vt = tier3_lib.event_verdict(l_ev, t_amb[hour_ev], rho_h[hour_ev],
+                                 product_idx, pue_design,
+                                 pue_aware=cfg.pue_aware)
+    events = reserve.assemble_events(vt, t_ev, valid, min_dur_f, valid_s, mw)
+
+    # --- settlement (capacity revenue vs clawback, hourly committed band;
+    #     same rule as settle_reserve, with the band gathered per event hour)
+    price = jnp.asarray(markets.CAPACITY_PRICE_EUR_MW_H)[product_idx]
+    committed_h = rho_h * mw * pue_design                  # (Hm,) meter MW
+    capacity_eur = price * jnp.sum(committed_h * mask)
+    penalty_eur = reserve.event_clawback(
+        events, price * committed_h[hour_ev] * tier3_lib.PENALTY_WINDOW_H)
+
+    acc = state.acc
+    n = jnp.maximum(acc.n_s, 1.0)
+    nw = jnp.maximum(acc.n_warm, 1.0)
+    out.update(
+        # twin summary (streaming aggregates; site-MW energies)
+        ar4_mae_norm=acc.err / nw,
+        tracking_err_mean=acc.track / nw,
+        chip_power_mean=acc.chip_mean / n,
+        chip_power_p95=acc.chip_p95 / n,
+        it_mwh=acc.load * mw / 3600.0,
+        fac_mwh=acc.fac * mw / 3600.0,
+        # reserve replay + settlement
+        events=events,
+        events_sched=events_sched,
+        n_events=jnp.sum(valid).astype(jnp.int32),
+        active_s=acc.shed_s.astype(jnp.int32),
+        shed_it_mwh=acc.shed_it * mw / 3600.0,
+        committed_mw=jnp.sum(committed_h * mask)
+        / jnp.maximum(jnp.sum(mask), 1.0),
+        capacity_eur=capacity_eur,
+        penalty_eur=penalty_eur,
+        net_eur=capacity_eur - penalty_eur,
+        n_compliant=jnp.sum(valid & events.compliant).astype(jnp.int32),
+    )
+    if reduce == "full":
+        out["metrics"] = metrics
+        out["trig"] = sec.trig
+        out["shed"] = sec.shed
+        out["load_sec"] = sec.load
+    return out
+
+
+@partial(jax.jit, static_argnames=("cfg", "reduce"))
+def _engine_seconds_jit(cfg: EngineConfig, reduce: str, batch: ScenarioBatch,
+                        freq, base_loads, keys) -> dict:
+    fn = partial(_rollout_one, cfg, reduce)
+    return jax.vmap(fn)(batch.ci, batch.t_amb, batch.mask, batch.hours,
+                        batch.mw, batch.pue_design, batch.product_idx,
+                        batch.reserve_rho, freq, base_loads, keys)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def _engine_hourly_jit(cfg: EngineConfig, batch: ScenarioBatch) -> dict:
+    fn = partial(_hourly_one, cfg)
+    return jax.vmap(fn)(batch.ci, batch.t_amb, batch.mask, batch.mw,
+                        batch.pue_design, batch.product_idx,
+                        batch.reserve_rho)
+
+
+# ---------------------------------------------------------------------------
+# Host-side scenario prep + the public rollout
+# ---------------------------------------------------------------------------
+
+
+def scenario_keys(batch: ScenarioBatch) -> tuple[jax.Array, jax.Array]:
+    """Per-scenario (load_key, scan_key): the same split the twin's
+    ``prepare_scenario`` makes from ``PRNGKey(seed)``."""
+    seeds = np.asarray(batch.seed)
+    pairs = [jax.random.split(jax.random.PRNGKey(int(s))) for s in seeds]
+    return (jnp.stack([p[0] for p in pairs]),
+            jnp.stack([p[1] for p in pairs]))
+
+
+def base_loads(cfg: EngineConfig, batch: ScenarioBatch) -> jax.Array:
+    """(N, T, H) unscaled per-host demand archetypes (twin `_host_loads`).
+
+    Scenarios sharing a seed share the trace; the per-hour ``mu`` scaling
+    happens inside the scan tick, so this is the only (N, T, H) buffer the
+    rollout touches and it is an *input*, never a stacked output.
+    """
+    T = int(batch.h_max) * 3600
+    tw = cfg.twin_config(T)
+    load_keys, _ = scenario_keys(batch)
+    cache: dict[int, jax.Array] = {}
+    rows = []
+    for i, s in enumerate(np.asarray(batch.seed)):
+        if int(s) not in cache:
+            cache[int(s)] = twin_lib._host_loads(tw, load_keys[i])
+        rows.append(cache[int(s)])
+    return jnp.stack(rows)
+
+
+def engine_rollout(cfg: EngineConfig, batch: ScenarioBatch, *,
+                   reduce: str = "summary", freq=None, loads=None) -> dict:
+    """Replay a ScenarioBatch through all composed tiers in ONE compiled
+    ``jit(vmap(lax.scan))`` call.
+
+    reduce="summary"  only running aggregates cross the scan boundary: every
+                      returned leaf is (N,), (N, H_max) or (N, e_max) --
+                      device memory does not scale with the horizon T.
+    reduce="full"     additionally stacks per-second TwinMetrics plus the
+                      (N, T) trigger/shed/load traces (the parity surface).
+
+    ``freq``/``loads`` override the synthesised 1 Hz frequency traces and
+    demand archetypes (e.g. to replay measured data); defaults synthesise
+    from the batch's seeds.  With ``cfg.with_seconds=False`` only the
+    hourly tiers run and neither input is touched.
+    """
+    if reduce not in ("summary", "full"):
+        raise ValueError(f"reduce must be 'summary' or 'full', got {reduce!r}")
+    if not cfg.with_seconds:
+        return _engine_hourly_jit(cfg, batch)
+    T = int(batch.h_max) * 3600
+    if freq is None:
+        freq, _ = frequency.synthesize_frequency_batch(
+            frequency_seeds(batch), batch.product_idx, n_seconds=T,
+            events_per_day=cfg.events_per_day,
+            max_events=cfg.max_freq_events)
+    if loads is None:
+        loads = base_loads(cfg, batch)
+    _, scan_keys = scenario_keys(batch)
+    return _engine_seconds_jit(cfg, reduce, batch, freq, loads, scan_keys)
+
+
+def summarize_rollout(cfg: EngineConfig, batch: ScenarioBatch,
+                      full: dict) -> dict:
+    """Recompute the streaming summary from a reduce="full" rollout.
+
+    The parity oracle for the in-scan reducer: applying this to the full
+    per-second stacks must reproduce engine_rollout(reduce="summary")'s
+    aggregates (same gating, same normalisation).
+    """
+    m: twin_lib.TwinMetrics = full["metrics"]
+    T = m.it_power.shape[-1]
+    t = np.arange(T)
+    hours = np.asarray(batch.hours)
+    mw = np.asarray(batch.mw)
+    design_host = cfg.chips_per_host * cfg.chip_tdp
+    out = {}
+    g = (t[None, :] < hours[:, None] * 3600)
+    w = g & (t[None, :] >= cfg.warmup_s)
+    nw = np.maximum(w.sum(-1), 1)
+    n = np.maximum(g.sum(-1), 1)
+    err = np.asarray(m.ar4_abs_err).mean(-1) / design_host     # (N, T)
+    out["ar4_mae_norm"] = (err * w).sum(-1) / nw
+    out["tracking_err_mean"] = (np.asarray(m.tracking_err) * w).sum(-1) / nw
+    out["chip_power_mean"] = (np.asarray(m.chip_power_mean) * g).sum(-1) / n
+    out["chip_power_p95"] = (np.asarray(m.chip_power_p95) * g).sum(-1) / n
+    L = np.asarray(m.it_power) / cfg.design_it_w
+    F = np.asarray(m.facility_power) / cfg.design_it_w
+    out["it_mwh"] = (L * g).sum(-1) * mw / 3600.0
+    out["fac_mwh"] = (F * g).sum(-1) * mw / 3600.0
+    out["active_s"] = (np.asarray(full["shed"]) & g).sum(-1)
+    return out

@@ -47,24 +47,24 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-import repro.core.plant as plant_lib
-import repro.core.pue as pue_lib
 import repro.core.tier3 as tier3_lib
+from repro.core.tier3 import event_verdict  # noqa: F401  (re-export: the
+# activation physics moved next to the Tier-3 selector so the price-aware
+# grid search and the replay verdicts share one function; this module keeps
+# its historical name for the scan, the reference loop, and callers.)
 from repro.grid import markets
 
 E_MAX = 64                  # per-scenario event-buffer slots
-DELIVERY_TOL = 0.02         # delivered_frac >= 1 - tol passes verification
-PENALTY_WINDOW_H = 24.0     # capacity revenue at risk per failed event
+# settlement rules live next to the selector that optimises against them
+DELIVERY_TOL = tier3_lib.DELIVERY_TOL
+PENALTY_WINDOW_H = tier3_lib.PENALTY_WINDOW_H
 
 # product constant tables, indexable by a traced int32 product index
 _PRODUCTS = [markets.FR_PRODUCTS[n] for n in markets.PRODUCT_ORDER]
-_TRIGGER_HZ = np.asarray([p.trigger_hz for p in _PRODUCTS], np.float32)
-_BUDGET_MS = np.asarray([p.activation_budget_ms for p in _PRODUCTS],
-                        np.float32)
-_MIN_DURATION_S = np.asarray([p.min_duration_s for p in _PRODUCTS],
-                             np.float32)
-_PRICE_EUR_MW_H = np.asarray([p.capacity_price_eur_mw_h for p in _PRODUCTS],
-                             np.float32)
+_TRIGGER_HZ = markets.TRIGGER_HZ
+_BUDGET_MS = markets.BUDGET_MS
+_MIN_DURATION_S = markets.MIN_DURATION_S
+_PRICE_EUR_MW_H = markets.CAPACITY_PRICE_EUR_MW_H
 
 
 class ReserveEvents(NamedTuple):
@@ -82,43 +82,73 @@ class ReserveEvents(NamedTuple):
     valid: jax.Array          # bool slot holds a real event
 
 
-def event_verdict(mu, t_amb, rho, product_idx, pue_design,
-                  pue_aware: bool = True) -> dict:
-    """Physics of one activation at operating point ``mu`` (pure fn).
-
-    Returns the armed IT-side band ``rho_it``, the governor-limited
-    delivery time, and the meter-level delivered band per unit of design
-    IT power.  Shared verbatim by the jnp scan and the Python reference
-    loop so verdicts agree bit-for-bit.
-    """
-    mu = jnp.maximum(jnp.asarray(mu, jnp.float32), 1e-3)
-    rho = jnp.asarray(rho, jnp.float32)
-    if pue_aware:
-        # invert the meter gain so the metered delta hits the static-PUE
-        # commitment (tier3.q_ffr's correction, applied at dispatch time)
-        gain = pue_lib.ffr_meter_gain(mu, rho, t_amb, pue_design=pue_design)
-        rho_it = rho * pue_design / jnp.maximum(gain, 1e-3)
-    else:
-        rho_it = rho
-    rho_it = jnp.clip(
-        rho_it, 0.0, jnp.maximum(mu - tier3_lib.MIN_RESIDUAL_LOAD, 0.0))
-    # governor: P(t) = P_pre * exp(-GOV_SLEW * t) after the NVML window
-    residual = jnp.maximum(mu - rho_it, 1e-3)
-    t_full_ms = plant_lib.ACTUATE_DELAY_MS + (
-        jnp.log(mu / residual) / plant_lib.GOV_SLEW)
-    budget_ok = t_full_ms <= jnp.asarray(_BUDGET_MS)[product_idx]
-    delivered_unit = pue_lib.ffr_meter_gain(
-        mu, rho_it, t_amb, pue_design=pue_design) * rho_it
-    committed_unit = rho * pue_design
-    delivered_frac = jnp.where(
-        committed_unit > 0.0, delivered_unit / committed_unit, 1.0)
-    delivered_ok = delivered_frac >= 1.0 - DELIVERY_TOL
-    return dict(rho_it=rho_it, t_full_ms=t_full_ms, budget_ok=budget_ok,
-                delivered_unit=delivered_unit, delivered_frac=delivered_frac,
-                delivered_ok=delivered_ok)
-
-
 _event_verdict_jit = jax.jit(event_verdict, static_argnames=("pue_aware",))
+
+
+def detection_step(carry, below, in_hor, min_dur_i):
+    """One 1 Hz tick of the two-word detection state machine.
+
+    carry = (in_event: bool, hold: int32).  Returns the new carry plus the
+    per-second (triggered, shedding) flags.  Factored out so the unified
+    ``repro.core.engine`` scan runs the IDENTICAL semantics fused into the
+    twin's tick -- event times match :func:`reserve_replay` exactly.
+    """
+    in_ev, hold = carry
+    trig = ~in_ev & below & in_hor
+    in_ev = in_ev | trig
+    hold = jnp.where(trig, min_dur_i, hold)
+    hold = jnp.where(in_ev, jnp.maximum(hold - 1, 0), hold)
+    released = in_ev & (hold == 0) & ~below
+    shed = in_ev & in_hor
+    return (in_ev & ~released, hold), trig, shed
+
+
+def detection_init():
+    """Initial (in_event, hold) carry of the detection state machine."""
+    return (jnp.asarray(False), jnp.asarray(0, jnp.int32))
+
+
+def event_times(trig, e_max: int):
+    """(T,) trigger flags -> (t_event (e_max,), valid (e_max,)).
+
+    The k-th trigger second is the first index where the running trigger
+    count reaches k+1, found by binary search on the cumsum (ascending,
+    exactly the order a sequential writer would record; overflow slots
+    land at T).  nonzero/top_k would sort the whole (T,) axis under vmap
+    -- ~10x this cost on CPU.
+    """
+    T = trig.shape[-1]
+    t_ev = jnp.searchsorted(
+        jnp.cumsum(trig.astype(jnp.int32)),
+        jnp.arange(1, e_max + 1)).astype(jnp.int32)
+    return t_ev, t_ev < T
+
+
+def assemble_events(v: dict, t_ev, valid, min_dur_f, valid_s,
+                    design_mw) -> ReserveEvents:
+    """Fixed-size verdict buffers from per-event physics ``v`` (each leaf
+    (e_max,)-shaped, as returned by :func:`event_verdict` gathered at the
+    event hours -- or, in the unified engine, evaluated at the twin's
+    per-second IT power)."""
+    sustain_s = jnp.minimum(min_dur_f, (valid_s - t_ev).astype(jnp.float32))
+    sustain_ok = sustain_s >= min_dur_f
+    compliant = v["budget_ok"] & sustain_ok & v["delivered_ok"]
+
+    def gate(x, fill=0.0):
+        return jnp.where(valid, x, fill)
+
+    return ReserveEvents(
+        t_event_s=gate(t_ev, -1),
+        t_full_ms=gate(v["t_full_ms"]),
+        sustain_s=gate(sustain_s),
+        delivered_mw=gate(v["delivered_unit"] * design_mw),
+        delivered_frac=gate(v["delivered_frac"]),
+        budget_ok=gate(v["budget_ok"], False),
+        sustain_ok=gate(sustain_ok, False),
+        delivered_ok=gate(v["delivered_ok"], False),
+        compliant=gate(compliant, False),
+        valid=valid,
+    )
 
 
 def reserve_replay(freq, mu_h, t_amb_h, valid_s, product_idx, rho,
@@ -171,50 +201,21 @@ def reserve_replay(freq, mu_h, t_amb_h, valid_s, product_idx, rho,
     in_hor_t = jnp.arange(T, dtype=jnp.int32) < valid_s
 
     def step(carry, xs):
-        in_ev, hold = carry
         below, in_hor = xs
-        trig = ~in_ev & below & in_hor
-        in_ev = in_ev | trig
-        hold = jnp.where(trig, min_dur_i, hold)
-        hold = jnp.where(in_ev, jnp.maximum(hold - 1, 0), hold)
-        released = in_ev & (hold == 0) & ~below
-        shed = in_ev & in_hor
-        return (in_ev & ~released, hold), (trig, shed)
+        carry, trig, shed = detection_step(carry, below, in_hor, min_dur_i)
+        return carry, (trig, shed)
 
-    carry0 = (jnp.asarray(False), jnp.asarray(0, jnp.int32))
-    _, (trig, shed) = jax.lax.scan(step, carry0, (below_t, in_hor_t),
-                                   unroll=unroll)
+    _, (trig, shed) = jax.lax.scan(step, detection_init(),
+                                   (below_t, in_hor_t), unroll=unroll)
 
-    # vectorised per-event extraction: the k-th trigger second is the first
-    # index where the running trigger count reaches k+1, found by binary
-    # search on the cumsum (ascending, exactly the order a sequential
-    # writer would record; overflow slots land at T).  nonzero/top_k would
-    # sort the whole (T,) axis under vmap -- ~10x this cost on CPU.
-    t_ev = jnp.searchsorted(
-        jnp.cumsum(trig.astype(jnp.int32)),
-        jnp.arange(1, e_max + 1)).astype(jnp.int32)
-    valid = t_ev < T
+    # vectorised per-event extraction (see event_times): the scan body
+    # only carries the two-word state machine, keeping it free of scatter
+    # writes -- the difference between this path beating the Python loop
+    # and losing to it by 50x on CPU.
+    t_ev, valid = event_times(trig, e_max)
     hour_ev = jnp.minimum(t_ev // 3600, h_max - 1)
     v = {k: x[hour_ev] for k, x in vh.items()}
-    sustain_s = jnp.minimum(min_dur_f, (valid_s - t_ev).astype(jnp.float32))
-    sustain_ok = sustain_s >= min_dur_f
-    compliant = v["budget_ok"] & sustain_ok & v["delivered_ok"]
-
-    def gate(x, fill=0.0):
-        return jnp.where(valid, x, fill)
-
-    events = ReserveEvents(
-        t_event_s=gate(t_ev, -1),
-        t_full_ms=gate(v["t_full_ms"]),
-        sustain_s=gate(sustain_s),
-        delivered_mw=gate(v["delivered_unit"] * design_mw),
-        delivered_frac=gate(v["delivered_frac"]),
-        budget_ok=gate(v["budget_ok"], False),
-        sustain_ok=gate(sustain_ok, False),
-        delivered_ok=gate(v["delivered_ok"], False),
-        compliant=gate(compliant, False),
-        valid=valid,
-    )
+    events = assemble_events(v, t_ev, valid, min_dur_f, valid_s, design_mw)
     hour_sec = jnp.minimum(jnp.arange(T, dtype=jnp.int32) // 3600, h_max - 1)
     shed_it_mwh = jnp.sum(
         jnp.where(shed, vh["rho_it"][hour_sec], 0.0)) * design_mw / 3600.0
@@ -239,27 +240,38 @@ def reserve_replay_batch(freq, mu_h, t_amb_h, valid_s, product_idx, rho,
                         design_mw, pue_design)
 
 
+def event_clawback(events: ReserveEvents, at_risk) -> jax.Array:
+    """Revenue forfeited over a verdict buffer: each valid event loses its
+    ``at_risk`` revenue in proportion to the delivery shortfall plus in
+    full on a budget/sustain failure (the European non-delivery clawback
+    shape).  ``at_risk``: (..., E) or broadcastable.  THE one
+    implementation of the clawback formula -- `settle_reserve`, the
+    unified engine's hourly-band settlement, and (ex-ante)
+    `tier3.revenue_score` all price the same rule.
+    """
+    shortfall = jnp.clip(1.0 - events.delivered_frac, 0.0, 1.0)
+    hard_miss = (~(events.budget_ok & events.sustain_ok)).astype(jnp.float32)
+    return jnp.sum(
+        jnp.where(events.valid, at_risk * (shortfall + hard_miss), 0.0),
+        axis=-1)
+
+
 def settle_reserve(events: ReserveEvents, product_idx, rho, design_mw,
                    pue_design, hours) -> dict:
     """Capacity-revenue / penalty settlement of one committed band.
 
     Availability pays ``price * committed_MW`` per committed hour; each
-    event puts PENALTY_WINDOW_H hours of that revenue at risk, forfeited
-    in proportion to the delivery shortfall plus in full on a
-    budget/sustain failure (the European non-delivery clawback shape).
-    Pure jnp over any leading batch axes (event fields are (..., E)).
+    event puts PENALTY_WINDOW_H hours of that revenue at risk
+    (see :func:`event_clawback`).  Pure jnp over any leading batch axes
+    (event fields are (..., E)).
     """
     price = jnp.asarray(_PRICE_EUR_MW_H)[jnp.asarray(product_idx)]
     committed_mw = (jnp.asarray(rho, jnp.float32)
                     * jnp.asarray(design_mw, jnp.float32)
                     * jnp.asarray(pue_design, jnp.float32))
     capacity_eur = committed_mw * jnp.asarray(hours, jnp.float32) * price
-    at_risk = (price * committed_mw * PENALTY_WINDOW_H)[..., None]
-    shortfall = jnp.clip(1.0 - events.delivered_frac, 0.0, 1.0)
-    hard_miss = (~(events.budget_ok & events.sustain_ok)).astype(jnp.float32)
-    penalty_eur = jnp.sum(
-        jnp.where(events.valid, at_risk * (shortfall + hard_miss), 0.0),
-        axis=-1)
+    penalty_eur = event_clawback(
+        events, (price * committed_mw * PENALTY_WINDOW_H)[..., None])
     return dict(
         committed_mw=committed_mw,
         capacity_eur=capacity_eur,

@@ -4,6 +4,7 @@ Grid search over the 2-D space (mean operating fraction mu in {0.4..0.9},
 FR reserve band rho in {0.0..0.3}) maximising
 
     J(mu, rho) = 0.55 * Q_FFR(mu, rho) + 0.45 * CFE(mu, rho)
+                 [+ w_rev * R(mu, rho)   when price-aware]
 
 Q_FFR is the relative FR-provision quality *at the facility meter* -- this
 is what motivates the PUE correction: a CI-only controller evaluates the
@@ -12,6 +13,18 @@ below the static design PUE (floors bind as load sheds).
 
 CFE uses the hourly greenness of the CI forecast: running high mu in
 low-CI windows raises the day's Carbon-Free Energy share.
+
+R is the settlement-revenue feedback from the reserve market (the E9
+loop closure): expected capacity revenue of the committed band minus the
+expected non-delivery clawback, priced with the SAME activation physics
+``settle_reserve`` applies after the fact (:func:`revenue_score`).  A
+price-aware selector avoids (mu, rho) cells whose governor-limited
+delivery time or meter shortfall would forfeit the revenue.
+
+The grid search itself is compiled ONCE at module level
+(:func:`select_operating_points`); every :class:`Tier3Selector` instance
+dispatches into the same jitted callable, so constructing selectors per
+scenario (as the twin and engine do) never re-traces.
 """
 from __future__ import annotations
 
@@ -22,17 +35,27 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro.core.plant as plant_lib
 import repro.core.pue as pue_lib
+import repro.grid.markets as markets
 
 MU_GRID = np.round(np.arange(0.4, 0.91, 0.1), 2)       # {0.4 .. 0.9}
 RHO_GRID = np.round(np.arange(0.0, 0.31, 0.1), 2)      # {0.0 .. 0.3}
 W_FFR, W_CFE = 0.55, 0.45
+W_REV_DEFAULT = 0.25            # revenue-term weight when price-aware
 # Shedding may not push the fleet below this fraction of design power.
 # Capping alone bottoms out at ~0.33 TDP (100 W cap floor), but the duty
 # shed preempts jobs entirely: an idled chip draws P_idle + min clocks
 # ~53 W ~ 0.17 TDP, which is the physical fleet floor.
 MIN_RESIDUAL_LOAD = 0.17
 RHO_MAX = float(RHO_GRID[-1])
+
+# reserve-settlement rules shared with repro.core.reserve (which re-exports
+# them): delivery tolerance of the per-event verification, and the hours of
+# capacity revenue at risk per failed event.
+DELIVERY_TOL = 0.02
+PENALTY_WINDOW_H = 24.0
+EVENTS_PER_DAY_DEFAULT = 4.0    # Nordic activation-statistics order
 
 
 class OperatingPoint(NamedTuple):
@@ -88,42 +111,199 @@ def cfe_score(mu, greenness) -> jax.Array:
     return greenness * mu_n + (1.0 - greenness) * (1.0 - mu_n)
 
 
+# ---------------------------------------------------------------------------
+# Activation physics (shared with the reserve replay: repro.core.reserve
+# re-exports event_verdict so the scan and the Python reference agree
+# bit-for-bit with what the selector optimises).
+# ---------------------------------------------------------------------------
+
+
+def event_verdict(mu, t_amb, rho, product_idx, pue_design,
+                  pue_aware: bool = True) -> dict:
+    """Physics of one activation at operating point ``mu`` (pure fn).
+
+    Returns the armed IT-side band ``rho_it``, the governor-limited
+    delivery time, and the meter-level delivered band per unit of design
+    IT power.  Shared verbatim by the jnp scans (reserve replay, unified
+    engine), the Python reference loop, and the Tier-3 revenue term so
+    verdicts agree bit-for-bit.
+    """
+    mu = jnp.maximum(jnp.asarray(mu, jnp.float32), 1e-3)
+    rho = jnp.asarray(rho, jnp.float32)
+    if pue_aware:
+        # invert the meter gain so the metered delta hits the static-PUE
+        # commitment (q_ffr's correction, applied at dispatch time)
+        gain = pue_lib.ffr_meter_gain(mu, rho, t_amb, pue_design=pue_design)
+        rho_it = rho * pue_design / jnp.maximum(gain, 1e-3)
+    else:
+        rho_it = rho
+    rho_it = jnp.clip(
+        rho_it, 0.0, jnp.maximum(mu - MIN_RESIDUAL_LOAD, 0.0))
+    # governor: P(t) = P_pre * exp(-GOV_SLEW * t) after the NVML window
+    residual = jnp.maximum(mu - rho_it, 1e-3)
+    t_full_ms = plant_lib.ACTUATE_DELAY_MS + (
+        jnp.log(mu / residual) / plant_lib.GOV_SLEW)
+    budget_ok = t_full_ms <= jnp.asarray(markets.BUDGET_MS)[product_idx]
+    delivered_unit = pue_lib.ffr_meter_gain(
+        mu, rho_it, t_amb, pue_design=pue_design) * rho_it
+    committed_unit = rho * pue_design
+    delivered_frac = jnp.where(
+        committed_unit > 0.0, delivered_unit / committed_unit, 1.0)
+    delivered_ok = delivered_frac >= 1.0 - DELIVERY_TOL
+    return dict(rho_it=rho_it, t_full_ms=t_full_ms, budget_ok=budget_ok,
+                delivered_unit=delivered_unit, delivered_frac=delivered_frac,
+                delivered_ok=delivered_ok)
+
+
+def revenue_score(mu, rho, t_amb, product_idx, *, pue_aware: bool,
+                  pue_design=pue_lib.PUE_DESIGN,
+                  events_per_day=EVENTS_PER_DAY_DEFAULT) -> jax.Array:
+    """Expected reserve-settlement net revenue of a committed band, in
+    units of the product's full-band capacity rate (so ~[-1, 1] after the
+    clip below).
+
+    Availability pays ``price * rho * PUE_design`` per hour; each expected
+    activation (Poisson ``events_per_day``) puts PENALTY_WINDOW_H hours of
+    that revenue at risk, forfeited in proportion to the meter shortfall
+    plus in full on a delivery-time budget miss -- exactly the clawback
+    ``settle_reserve`` applies after the fact, evaluated ex-ante with the
+    same :func:`event_verdict` physics.  This is the Tier-3 price
+    feedback: cells whose governor-limited ``t_full`` or PUE shortfall
+    would forfeit revenue score negative and are avoided.
+    """
+    rho = jnp.asarray(rho, jnp.float32)
+    v = event_verdict(mu, t_amb, rho, product_idx, pue_design,
+                      pue_aware=pue_aware)
+    shortfall = jnp.clip(1.0 - v["delivered_frac"], 0.0, 1.0)
+    hard_miss = 1.0 - v["budget_ok"].astype(jnp.float32)
+    ev_per_h = jnp.asarray(events_per_day, jnp.float32) / 24.0
+    at_risk = ev_per_h * PENALTY_WINDOW_H * (shortfall + hard_miss)
+    net = (rho / RHO_MAX) * (1.0 - at_risk)
+    return jnp.clip(net, -1.0, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# The grid search, compiled once at module level.
+# ---------------------------------------------------------------------------
+
+# how many times the selection objective has been traced, keyed by input
+# shape -- the regression test pins that a second same-shape call (or a
+# second Selector instance) dispatches into the compile cache.
+SELECT_TRACE_COUNT = {"n": 0}
+
+
+def _select_impl(greenness, t_amb, weights, pue_design, product_idx,
+                 events_per_day, rho_fixed, *, pue_aware: bool,
+                 use_revenue: bool, fix_rho: bool):
+    """Vectorised (B,)-hour grid search.  Traced once per (shape, static)
+    combination; all scalar knobs (weights, pue_design, product, rho) are
+    traced operands so selector instances share the compile cache."""
+    SELECT_TRACE_COUNT["n"] += 1
+    mus = jnp.asarray(MU_GRID, jnp.float32)
+    rhos = (jnp.reshape(jnp.asarray(rho_fixed, jnp.float32), (1,))
+            if fix_rho else jnp.asarray(RHO_GRID, jnp.float32))
+    MU, RHO = jnp.meshgrid(mus, rhos, indexing="ij")   # (6, R)
+    g = greenness[:, None, None]
+    ta = t_amb[:, None, None]
+    q = q_ffr(MU[None], RHO[None], ta, pue_aware=pue_aware,
+              pue_design=pue_design)
+    J = weights[0] * q + weights[1] * cfe_score(MU[None], g)
+    if use_revenue:
+        J = J + weights[2] * revenue_score(
+            MU[None], RHO[None], ta, product_idx, pue_aware=pue_aware,
+            pue_design=pue_design, events_per_day=events_per_day)
+    flat = J.reshape(J.shape[0], -1)
+    idx = jnp.argmax(flat, axis=-1)
+    return MU.reshape(-1)[idx], RHO.reshape(-1)[idx]
+
+
+_select_jit = jax.jit(
+    _select_impl, static_argnames=("pue_aware", "use_revenue", "fix_rho"))
+
+
+def select_operating_points(greenness, t_amb, *, pue_aware: bool,
+                            pue_design=pue_lib.PUE_DESIGN,
+                            weights=(W_FFR, W_CFE, 0.0),
+                            product_idx=0,
+                            events_per_day=EVENTS_PER_DAY_DEFAULT,
+                            rho_fixed=0.0,
+                            use_revenue: bool = False,
+                            fix_rho: bool = False) -> OperatingPoint:
+    """Functional hourly grid search: (B,) greenness/t_amb -> (B,) (mu, rho).
+
+    ``fix_rho=True`` restricts the search to the (traced) committed band
+    ``rho_fixed`` -- the unified engine's ``rho_mode="batch"`` path, where
+    the band was sold ahead of time and only mu is free.  Pure jnp and
+    jit-compiled once at module level; safe to call inside an outer jit.
+    """
+    g = jnp.asarray(greenness, jnp.float32).reshape(-1)
+    ta = jnp.broadcast_to(jnp.asarray(t_amb, jnp.float32).reshape(-1),
+                          g.shape)
+    mu, rho = _select_jit(
+        g, ta, jnp.asarray(weights, jnp.float32),
+        jnp.asarray(pue_design, jnp.float32),
+        jnp.asarray(product_idx, jnp.int32),
+        jnp.asarray(events_per_day, jnp.float32),
+        jnp.asarray(rho_fixed, jnp.float32),
+        pue_aware=pue_aware, use_revenue=use_revenue, fix_rho=fix_rho)
+    return OperatingPoint(mu=mu, rho=rho)
+
+
+def greenness_from_ci(ci, mask=None) -> jax.Array:
+    """Normalised inverse CI over the (masked) forecast window."""
+    ci = jnp.asarray(ci, jnp.float32)
+    if mask is None:
+        lo, hi = jnp.min(ci), jnp.max(ci)
+    else:
+        lo = jnp.min(jnp.where(mask > 0, ci, jnp.inf))
+        hi = jnp.max(jnp.where(mask > 0, ci, -jnp.inf))
+    return jnp.clip(1.0 - (ci - lo) / jnp.maximum(hi - lo, 1e-6), 0.0, 1.0)
+
+
 @dataclasses.dataclass(frozen=True)
 class Tier3Selector:
-    """Hourly operating-point selection over a 24 h look-ahead window."""
+    """Hourly operating-point selection over a 24 h look-ahead window.
+
+    ``w_rev > 0`` turns on the settlement-revenue feedback (price-aware
+    operating points) for the FR product named by ``product``.  All
+    instances dispatch into one module-level jitted grid search, so
+    constructing a selector per scenario costs nothing.
+    """
 
     pue_aware: bool = True
     pue_design: float = pue_lib.PUE_DESIGN
     w_ffr: float = W_FFR
     w_cfe: float = W_CFE
+    w_rev: float = 0.0
+    product: str = "FFR"
+    events_per_day: float = EVENTS_PER_DAY_DEFAULT
 
     def objective(self, mu, rho, greenness, t_amb) -> jax.Array:
         q = q_ffr(mu, rho, t_amb, pue_aware=self.pue_aware,
                   pue_design=self.pue_design)
         c = cfe_score(mu, greenness)
-        return self.w_ffr * q + self.w_cfe * c
+        J = self.w_ffr * q + self.w_cfe * c
+        if self.w_rev:
+            J = J + self.w_rev * revenue_score(
+                mu, rho, t_amb, markets.PRODUCT_ORDER.index(self.product),
+                pue_aware=self.pue_aware, pue_design=self.pue_design,
+                events_per_day=self.events_per_day)
+        return J
 
     def select_hour(self, greenness, t_amb) -> OperatingPoint:
         """Grid search one hour.  greenness/t_amb are scalars (or batched)."""
-        mus = jnp.asarray(MU_GRID, jnp.float32)
-        rhos = jnp.asarray(RHO_GRID, jnp.float32)
-        MU, RHO = jnp.meshgrid(mus, rhos, indexing="ij")  # (6,4)
-        J = self.objective(
-            MU[None], RHO[None],
-            jnp.asarray(greenness, jnp.float32).reshape(-1, 1, 1),
-            jnp.asarray(t_amb, jnp.float32).reshape(-1, 1, 1),
-        )  # (B,6,4)
-        flat = J.reshape(J.shape[0], -1)
-        idx = jnp.argmax(flat, axis=-1)
-        mu = MU.reshape(-1)[idx]
-        rho = RHO.reshape(-1)[idx]
-        return OperatingPoint(mu=jnp.squeeze(mu), rho=jnp.squeeze(rho))
+        op = select_operating_points(
+            greenness, t_amb, pue_aware=self.pue_aware,
+            pue_design=self.pue_design,
+            weights=(self.w_ffr, self.w_cfe, self.w_rev),
+            product_idx=markets.PRODUCT_ORDER.index(self.product),
+            events_per_day=self.events_per_day,
+            use_revenue=bool(self.w_rev))
+        return OperatingPoint(mu=jnp.squeeze(op.mu), rho=jnp.squeeze(op.rho))
 
     def select_day(self, ci_24h, t_amb_24h) -> OperatingPoint:
         """Vectorised selection for a 24-entry forecast window."""
-        ci = jnp.asarray(ci_24h, jnp.float32)
-        lo, hi = jnp.min(ci), jnp.max(ci)
-        green = 1.0 - (ci - lo) / jnp.maximum(hi - lo, 1e-6)
+        green = greenness_from_ci(ci_24h)
         return self.select_hour(green, jnp.asarray(t_amb_24h, jnp.float32))
 
 

@@ -121,79 +121,100 @@ class TwinScenario:
     seed: int
 
 
+def twin_carry_init(n_hosts: int, chips_per_host: int, key):
+    """Initial Tier-2 + plant carry of the 1 Hz scan: (rls, chip_power,
+    caps, key).  Shared with the unified ``repro.core.engine`` scan."""
+    rls0 = ar4_lib.init_rls(n_hosts)
+    chip_power0 = jnp.full((n_hosts, chips_per_host), plant_lib.P_IDLE,
+                           jnp.float32)
+    caps0 = jnp.full((n_hosts, chips_per_host), plant_lib.CAP_MAX,
+                     jnp.float32)
+    return (rls0, chip_power0, caps0, key)
+
+
+def twin_tick(n_hosts: int, chips_per_host: int, chip_tdp: float,
+              pue_design, carry, load_h, mu, rho, ffr, t_amb):
+    """The 1 Hz fused Tier-2/Tier-1/plant update for one second.
+
+    Factored out of the twin scan so the unified engine runs the IDENTICAL
+    physics with the reserve detection fused into the same pass.
+    ``pue_design`` may be traced (the engine threads the per-scenario
+    design axis through it); the dims are static Python ints/floats.
+    Returns (carry, TwinMetrics row).
+    """
+    H, C = n_hosts, chips_per_host
+    design_host = C * chip_tdp
+    design_it_w = H * design_host
+    rls, chip_power, caps, kk = carry
+    kk, k1 = jax.random.split(kk)
+
+    # --- cluster envelope from Tier-3 (+ island shed during FFR) ------
+    frac = jnp.where(ffr, mu - rho, mu)
+    envelope = frac * design_it_w
+    host_env = jnp.full((H,), 1.0) * (frac * design_host)
+    # FFR actuation is caps + duty shed: the reserve band is held as
+    # instantly-sheddable duty-cycled steps (DESIGN.md §2), so demand
+    # itself drops during an activation, not just the cap.
+    load_h = load_h * jnp.where(ffr, frac / jnp.maximum(mu, 1e-3), 1.0)
+
+    # --- Tier-2: predict next-second host power, rebalance caps -------
+    # RLS runs on normalised host power (see ar4.rls_update numerics).
+    pred = ar4_lib.predict(rls) * design_host  # (H,) W
+    caps = ar4_lib.host_rebalance(
+        pred, host_env, jnp.maximum(chip_power, plant_lib.P_IDLE),
+        plant_lib.CAP_MIN, plant_lib.CAP_MAX,
+    )
+
+    # --- Tier-1 + plant, quasi-static over the 1 s tick ---------------
+    demand = plant_lib.power_model(
+        plant_lib.F_NOMINAL, load_h[:, None]
+    ) + 2.0 * jax.random.normal(k1, (H, C))
+    target = jnp.minimum(demand, caps)
+    # FFR deep shed: preemption can idle chips below the 100 W cap
+    # floor, down to P_idle + min clocks (~53 W) -- the duty-cycled
+    # reserve is job shedding, not just capping (DESIGN.md §2).
+    idle_floor = 53.0
+    shed_target = jnp.clip(frac * chip_tdp, idle_floor, caps)
+    target = jnp.where(ffr, jnp.minimum(target, shed_target), target)
+    # 1 s >> tau and >> the ~100 ms governor ramp: quasi-static
+    chip_power = target
+
+    host_power = jnp.sum(chip_power, axis=1)  # (H,)
+    rls, abs_err_norm = ar4_lib.rls_update(rls, host_power / design_host)
+    abs_err = abs_err_norm * design_host
+
+    it = jnp.sum(host_power)
+    L = it / design_it_w
+    fac = it * pue_lib.pue(L, t_amb, pue_design=pue_design)
+    track = jnp.abs(it - envelope) / jnp.maximum(envelope, 1.0)
+
+    out = TwinMetrics(
+        host_power=host_power,
+        host_pred=pred,
+        ar4_abs_err=abs_err,
+        chip_power_mean=jnp.mean(chip_power),
+        chip_power_p95=jnp.percentile(chip_power, 95.0),
+        envelope=envelope,
+        it_power=it,
+        facility_power=fac,
+        ffr_active=ffr,
+        tracking_err=track,
+    )
+    return (rls, chip_power, caps, kk), out
+
+
 def _twin_scan_impl(cfg: TwinConfig, inputs: TwinInputs):
     """The 1 Hz fused update.  All (T,)-indexed inputs precomputed."""
     loads, mu_sec, rho_sec, ffr_sec, t_amb_sec, key = inputs
-    H, C = cfg.n_hosts, cfg.chips_per_host
-    design_host = C * cfg.chip_tdp
-
-    rls0 = ar4_lib.init_rls(H)
-    chip_power0 = jnp.full((H, C), plant_lib.P_IDLE, jnp.float32)
-    caps0 = jnp.full((H, C), plant_lib.CAP_MAX, jnp.float32)
 
     def tick(carry, xs):
-        rls, chip_power, caps, kk = carry
         load_h, mu, rho, ffr, t_amb = xs
-        kk, k1 = jax.random.split(kk)
-
-        # --- cluster envelope from Tier-3 (+ island shed during FFR) ------
-        frac = jnp.where(ffr, mu - rho, mu)
-        envelope = frac * cfg.design_it_w
-        host_env = jnp.full((H,), frac * design_host)
-        # FFR actuation is caps + duty shed: the reserve band is held as
-        # instantly-sheddable duty-cycled steps (DESIGN.md §2), so demand
-        # itself drops during an activation, not just the cap.
-        load_h = load_h * jnp.where(ffr, frac / jnp.maximum(mu, 1e-3), 1.0)
-
-        # --- Tier-2: predict next-second host power, rebalance caps -------
-        # RLS runs on normalised host power (see ar4.rls_update numerics).
-        pred = ar4_lib.predict(rls) * design_host  # (H,) W
-        caps = ar4_lib.host_rebalance(
-            pred, host_env, jnp.maximum(chip_power, plant_lib.P_IDLE),
-            plant_lib.CAP_MIN, plant_lib.CAP_MAX,
-        )
-
-        # --- Tier-1 + plant, quasi-static over the 1 s tick ---------------
-        demand = plant_lib.power_model(
-            plant_lib.F_NOMINAL, load_h[:, None]
-        ) + 2.0 * jax.random.normal(k1, (H, C))
-        target = jnp.minimum(demand, caps)
-        # FFR deep shed: preemption can idle chips below the 100 W cap
-        # floor, down to P_idle + min clocks (~53 W) -- the duty-cycled
-        # reserve is job shedding, not just capping (DESIGN.md §2).
-        idle_floor = 53.0
-        shed_target = jnp.clip(frac * cfg.chip_tdp, idle_floor, caps)
-        target = jnp.where(ffr, jnp.minimum(target, shed_target), target)
-        # 1 s >> tau and >> the ~100 ms governor ramp: quasi-static
-        chip_power = target
-
-        host_power = jnp.sum(chip_power, axis=1)  # (H,)
-        rls, abs_err_norm = ar4_lib.rls_update(rls, host_power / design_host)
-        abs_err = abs_err_norm * design_host
-
-        it = jnp.sum(host_power)
-        L = it / cfg.design_it_w
-        fac = it * pue_lib.pue(L, t_amb, pue_design=cfg.pue_design)
-        track = jnp.abs(it - envelope) / jnp.maximum(envelope, 1.0)
-
-        out = TwinMetrics(
-            host_power=host_power,
-            host_pred=pred,
-            ar4_abs_err=abs_err,
-            chip_power_mean=jnp.mean(chip_power),
-            chip_power_p95=jnp.percentile(chip_power, 95.0),
-            envelope=envelope,
-            it_power=it,
-            facility_power=fac,
-            ffr_active=ffr,
-            tracking_err=track,
-        )
-        return (rls, chip_power, caps, kk), out
+        return twin_tick(cfg.n_hosts, cfg.chips_per_host, cfg.chip_tdp,
+                         cfg.pue_design, carry, load_h, mu, rho, ffr, t_amb)
 
     xs = (loads, mu_sec, rho_sec, ffr_sec, t_amb_sec)
-    (_, _, _, _), out = jax.lax.scan(
-        tick, (rls0, chip_power0, caps0, key), xs
-    )
+    carry0 = twin_carry_init(cfg.n_hosts, cfg.chips_per_host, key)
+    _, out = jax.lax.scan(tick, carry0, xs)
     return out
 
 

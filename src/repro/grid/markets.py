@@ -41,6 +41,17 @@ FR_PRODUCTS: dict[str, FRProduct] = {
 # product is carried as an int32 index into this tuple on device.
 PRODUCT_ORDER: tuple[str, ...] = tuple(FR_PRODUCTS)
 
+# Product constant tables in PRODUCT_ORDER, indexable by a traced int32
+# product index.  Shared by the reserve replay scan, the Tier-3 revenue
+# term, and the frequency synthesiser, so the rules live in one place.
+_P = [FR_PRODUCTS[n] for n in PRODUCT_ORDER]
+TRIGGER_HZ = np.asarray([p.trigger_hz for p in _P], np.float32)
+BUDGET_MS = np.asarray([p.activation_budget_ms for p in _P], np.float32)
+MIN_DURATION_S = np.asarray([p.min_duration_s for p in _P], np.float32)
+CAPACITY_PRICE_EUR_MW_H = np.asarray(
+    [p.capacity_price_eur_mw_h for p in _P], np.float32)
+del _P
+
 
 class FFRTriggerGen:
     """Poisson under-frequency events.

@@ -156,6 +156,16 @@ def build_scenario_batch(specs: Sequence[ScenarioSpec]) -> ScenarioBatch:
     )
 
 
+def frequency_seeds(batch: ScenarioBatch) -> jax.Array:
+    """Deterministic per-scenario frequency-synthesis seed: scenarios that
+    differ only in country/rho draw the same grid-event day.  Scenarios
+    differing in product share event *times* but not depths (the nadir
+    window is product-specific), so cross-product settlement rows compare
+    product rules on similar, not identical, traces."""
+    return (jnp.asarray(batch.event_seed, jnp.uint32) * 100_003
+            + jnp.asarray(batch.seed, jnp.uint32))
+
+
 def masked_quantile_sorted(xs: jax.Array, n_valid, q: float) -> jax.Array:
     """Quantile from an ascending-sorted array whose first ``n_valid``
     entries are the valid ones (invalid sorted to +inf).  Exists so a sort

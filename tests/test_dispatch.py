@@ -86,6 +86,36 @@ def test_reserve_rho_withholds_capacity():
     assert np.mean(sr.wait_hours) >= np.mean(s0.wait_hours) - 1e-9
 
 
+def test_run_accounting_matches_replay_schedule():
+    """run() delegates its energy/carbon integration to replay_schedule
+    over the realised utilisation trace -- the totals must match calling
+    the integrator by hand."""
+    import repro.core.dispatch as dispatch
+
+    d = _dispatcher(seed=6)
+    jobs = synthesize_m100_trace(40, 48.0, 32, seed=6)
+    stats = d.run(jobs, horizon_h=48)
+    mu = np.asarray(stats.util_trace, np.float32)
+    tot = dispatch.replay_schedule(
+        mu, d.ci[:48].astype(np.float32), d.t_amb[:48].astype(np.float32),
+        np.ones_like(mu), pue_design=d.pue_design,
+        green_ci=float(d.green_ci), design_w=d.design_it_w)
+    assert stats.it_energy_mwh == pytest.approx(float(tot["it"]) / 1e6,
+                                                rel=1e-6)
+    assert stats.co2_t == pytest.approx(float(tot["co2"]) / 1e9, rel=1e-6)
+    assert stats.cfe_num == pytest.approx(float(tot["cfe_fac"]) / 1e6,
+                                          rel=1e-6)
+    assert len(stats.pue_trace) == 48 and min(stats.pue_trace) >= 1.0
+
+
+def test_run_warns_on_removed_inline_accounting_kwargs():
+    d = _dispatcher(seed=7)
+    with pytest.warns(DeprecationWarning, match="replay_schedule"):
+        d.run([], horizon_h=2, integrate_energy=True)
+    with pytest.raises(TypeError):
+        d.run([], horizon_h=2, not_a_kwarg=1)
+
+
 @given(st.integers(0, 10_000))
 @settings(max_examples=20, deadline=None)
 def test_beta_monotone_in_wait(seed):

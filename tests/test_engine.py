@@ -1,0 +1,258 @@
+"""Unified engine parity: ONE fused jit(vmap(scan)) == the hand-stitched
+per-tier composition, and the streaming summary == reducing the full
+per-second stacks."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core.dispatch as dispatch
+import repro.core.engine as eng
+import repro.core.reserve as reserve
+import repro.core.tier3 as tier3
+import repro.core.twin as twin_lib
+from repro.grid import frequency
+from repro.grid.scenarios import (build_scenario_batch, frequency_seeds,
+                                  product_specs)
+
+CFG = eng.EngineConfig(n_hosts=3, chips_per_host=2, e_max=8,
+                       events_per_day=48.0, unroll=2)
+
+
+@pytest.fixture(scope="module")
+def rollout():
+    """One small batch rolled out once: (batch, freq, summary, full)."""
+    specs = product_specs(countries=("DE", "SE"), seeds=(1,), horizon_h=2,
+                          products=("FFR",), reserve_rhos=(0.2,),
+                          event_seeds=(3,))
+    batch = build_scenario_batch(specs)
+    T = int(batch.h_max) * 3600
+    freq, _ = frequency.synthesize_frequency_batch(
+        frequency_seeds(batch), batch.product_idx, n_seconds=T,
+        events_per_day=CFG.events_per_day, max_events=CFG.max_freq_events)
+    full = eng.engine_rollout(CFG, batch, reduce="full", freq=freq)
+    summ = eng.engine_rollout(CFG, batch, reduce="summary", freq=freq)
+    return batch, freq, summ, full
+
+
+def _sec_tables(batch, full):
+    """Hourly engine tables expanded to per-second (the twin's input shape)."""
+    T = int(batch.h_max) * 3600
+    hour_idx = np.minimum(np.arange(T) // 3600, int(batch.h_max) - 1)
+    return (np.asarray(full["mu_h"])[:, hour_idx],
+            np.asarray(full["rho_h"])[:, hour_idx],
+            np.asarray(batch.t_amb)[:, hour_idx])
+
+
+def test_events_detected(rollout):
+    batch, _, summ, _ = rollout
+    # the pinned seeds must exercise the reserve path, else the parity
+    # tests below are vacuous
+    assert (np.asarray(summ["n_events"]) > 0).all()
+
+
+def test_full_matches_hand_composed_twin(rollout):
+    """engine_rollout(reduce="full") twin metrics == run_twin_batch's
+    vmapped scan fed the engine's own schedule + detected shed trace."""
+    batch, _, _, full = rollout
+    T = int(batch.h_max) * 3600
+    mu_sec, rho_sec, ta_sec = _sec_tables(batch, full)
+    loads = eng.base_loads(CFG, batch)
+    _, scan_keys = eng.scenario_keys(batch)
+    inputs = twin_lib.TwinInputs(
+        loads=loads * jnp.asarray(mu_sec)[:, :, None] / 0.9,
+        mu_sec=jnp.asarray(mu_sec), rho_sec=jnp.asarray(rho_sec),
+        ffr_sec=jnp.asarray(np.asarray(full["shed"])),
+        t_amb_sec=jnp.asarray(ta_sec), key=scan_keys)
+    tout = twin_lib._twin_scan_batch(CFG.twin_config(T), inputs)
+    # element-wise parity on the physical traces (the two compiled
+    # programs differ only by XLA float reassociation, O(1e-4) W)
+    for f in ("host_power", "it_power", "facility_power", "envelope",
+              "chip_power_mean", "chip_power_p95", "ffr_active"):
+        a = np.asarray(getattr(tout, f), np.float32)
+        b = np.asarray(getattr(full["metrics"], f), np.float32)
+        np.testing.assert_allclose(a, b, atol=0.5, rtol=1e-4, err_msg=f)
+    # the RLS prediction chaotically amplifies the reassociation noise at
+    # isolated ticks; pin the aggregate instead of the element-wise max
+    for f in ("host_pred", "ar4_abs_err"):
+        a = np.asarray(getattr(tout, f), np.float32)
+        b = np.asarray(getattr(full["metrics"], f), np.float32)
+        assert np.mean(np.abs(a - b)) < 0.5, f        # W, design_host=600
+        assert np.quantile(np.abs(a - b), 0.99) < 5.0, f
+
+
+def test_full_matches_hand_composed_reserve(rollout):
+    """The engine's schedule-side events ARE reserve_replay_batch: exact
+    parity on detection + verdicts."""
+    batch, freq, _, full = rollout
+    res = reserve.reserve_replay_batch(
+        freq, full["mu_h"], batch.t_amb, batch.hours * 3600,
+        batch.product_idx, batch.reserve_rho, batch.mw, batch.pue_design,
+        e_max=CFG.e_max)
+    ev_r, ev_e = res["events"], full["events_sched"]
+    for f in ("t_event_s", "budget_ok", "sustain_ok", "delivered_ok",
+              "compliant", "valid"):
+        np.testing.assert_array_equal(np.asarray(getattr(ev_r, f)),
+                                      np.asarray(getattr(ev_e, f)), err_msg=f)
+    for f in ("t_full_ms", "sustain_s", "delivered_mw", "delivered_frac"):
+        np.testing.assert_allclose(np.asarray(getattr(ev_r, f)),
+                                   np.asarray(getattr(ev_e, f)),
+                                   atol=1e-3, err_msg=f)
+    np.testing.assert_array_equal(np.asarray(res["n_events"]),
+                                  np.asarray(full["n_events"]))
+    np.testing.assert_array_equal(np.asarray(res["active_s"]),
+                                  np.asarray(full["active_s"]))
+    np.testing.assert_allclose(np.asarray(res["shed_it_mwh"]),
+                               np.asarray(full["shed_it_mwh"]), atol=1e-4)
+
+
+def test_full_matches_hand_composed_schedule_energy(rollout):
+    batch, _, _, full = rollout
+    en = jax.vmap(lambda m, c, t, k, pd, mw: dispatch.replay_schedule(
+        m, c, t, k, pue_design=pd, design_w=mw))(
+        full["mu_h"], batch.ci, batch.t_amb, batch.mask,
+        batch.pue_design, batch.mw)
+    np.testing.assert_allclose(np.asarray(en["it"]),
+                               np.asarray(full["sched_it_mwh"]), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(en["co2"]) / 1000.0,
+                               np.asarray(full["sched_co2_t"]), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(en["fac"]),
+                               np.asarray(full["sched_fac_mwh"]), rtol=1e-6)
+
+
+def test_summary_matches_reduced_full(rollout):
+    """The in-scan streaming reducer == reducing the full stacks."""
+    batch, _, summ, full = rollout
+    red = eng.summarize_rollout(CFG, batch, full)
+    for k, v in red.items():
+        np.testing.assert_allclose(np.asarray(summ[k]), v, rtol=1e-4,
+                                   atol=1e-4, err_msg=k)
+    # events and settlement come from the same scan in both modes
+    for f in reserve.ReserveEvents._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(summ["events"], f)),
+            np.asarray(getattr(full["events"], f)), err_msg=f)
+    for k in ("capacity_eur", "penalty_eur", "net_eur", "n_compliant"):
+        np.testing.assert_allclose(np.asarray(summ[k]), np.asarray(full[k]),
+                                   rtol=1e-6, err_msg=k)
+
+
+def test_settlement_matches_settle_reserve(rollout):
+    """For a constant committed band the engine's hourly-rho settlement
+    reduces to settle_reserve on the twin-coupled events."""
+    batch, _, summ, _ = rollout
+    ref = jax.vmap(lambda ev, p, r, mw, pd, h: reserve.settle_reserve(
+        ev, p, r, mw, pd, h))(
+        summ["events"], batch.product_idx, batch.reserve_rho, batch.mw,
+        batch.pue_design, batch.hours)
+    np.testing.assert_allclose(np.asarray(ref["capacity_eur"]),
+                               np.asarray(summ["capacity_eur"]), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(ref["penalty_eur"]),
+                               np.asarray(summ["penalty_eur"]), rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(ref["n_compliant"]),
+                                  np.asarray(summ["n_compliant"]))
+
+
+def test_twin_verdicts_diverge_exactly_with_tracking_error(rollout):
+    """Twin-coupled delivered MW is event_verdict at the twin's pre-trigger
+    per-second IT power: it equals the quasi-static replay's verdict iff
+    the Tier-2 tracking error at the trigger second is ~zero."""
+    batch, _, _, full = rollout
+    T = int(batch.h_max) * 3600
+    ev_t, ev_s = full["events"], full["events_sched"]
+    mu_sec, rho_sec, ta_sec = _sec_tables(batch, full)
+    load_sec = np.asarray(full["load_sec"])
+    any_diverged = False
+    for i in range(len(batch)):
+        valid = np.asarray(ev_t.valid)[i]
+        t_ev = np.asarray(ev_t.t_event_s)[i]
+        for k in np.flatnonzero(valid):
+            t = int(t_ev[k])
+            l_pre = load_sec[i, t]
+            # exact recompute: the engine's verdict IS event_verdict(l_pre)
+            v = tier3.event_verdict(
+                jnp.float32(l_pre), jnp.float32(ta_sec[i, t]),
+                jnp.float32(rho_sec[i, t]), int(batch.product_idx[i]),
+                jnp.float32(batch.pue_design[i]), pue_aware=True)
+            assert float(v["delivered_frac"]) == pytest.approx(
+                float(np.asarray(ev_t.delivered_frac)[i, k]), abs=1e-6)
+            track = abs(l_pre - mu_sec[i, t]) / max(mu_sec[i, t], 1e-6)
+            gap = abs(float(np.asarray(ev_t.delivered_frac)[i, k])
+                      - float(np.asarray(ev_s.delivered_frac)[i, k]))
+            if track > 1e-3:
+                assert gap > 0.0
+                any_diverged = True
+            elif track < 1e-8:
+                assert gap == 0.0
+    assert any_diverged  # the twin's tracking error is visible at the meter
+
+
+def test_summary_outputs_do_not_scale_with_horizon(rollout):
+    """reduce="summary" returns no leaf with a T (seconds) axis."""
+    batch, _, summ, _ = rollout
+    T = int(batch.h_max) * 3600
+    for leaf in jax.tree.leaves(summ):
+        assert all(d != T for d in np.shape(leaf)), np.shape(leaf)
+        assert np.ndim(leaf) <= 2
+
+
+def test_summary_large_horizon_smoke():
+    """A long-horizon summary rollout stays O(N*H) in output: the in-scan
+    reducer never materialises (N, T, H) metric stacks."""
+    specs = product_specs(countries=("DE",), seeds=(1,), horizon_h=12,
+                          products=("FFR",), reserve_rhos=(0.2,),
+                          event_seeds=(3,))
+    batch = build_scenario_batch(specs)
+    cfg = dataclasses.replace(CFG, n_hosts=2, unroll=8)
+    out = eng.engine_rollout(cfg, batch)
+    T = int(batch.h_max) * 3600
+    for leaf in jax.tree.leaves(out):
+        assert all(d != T for d in np.shape(leaf))
+    assert np.isfinite(np.asarray(out["net_eur"])).all()
+    assert float(out["it_mwh"][0]) > 0.0
+
+
+def test_hourly_only_engine_matches_replay_schedule():
+    specs = product_specs(countries=("SE", "PL"), horizon_h=48,
+                          reserve_rhos=(0.1,))
+    batch = build_scenario_batch(specs)
+    cfg = eng.EngineConfig(with_seconds=False)
+    out = eng.engine_rollout(cfg, batch)
+    assert "events" not in out
+    en = jax.vmap(lambda m, c, t, k, pd, mw: dispatch.replay_schedule(
+        m, c, t, k, pue_design=pd, design_w=mw))(
+        out["mu_h"], batch.ci, batch.t_amb, batch.mask,
+        batch.pue_design, batch.mw)
+    np.testing.assert_allclose(np.asarray(en["it"]),
+                               np.asarray(out["sched_it_mwh"]), rtol=1e-6)
+    # the committed band is respected by the fixed-rho grid search
+    np.testing.assert_allclose(np.asarray(out["mean_rho"]), 0.1, atol=1e-6)
+    # feasibility: mu - rho never below the fleet floor on valid hours
+    mu = np.asarray(out["mu_h"])
+    m = np.asarray(batch.mask) > 0
+    assert (mu[m] - 0.1 >= tier3.MIN_RESIDUAL_LOAD - 1e-6).all()
+
+
+def test_price_aware_selection_shifts_operating_points():
+    """The settlement-revenue term changes the chosen (mu, rho)."""
+    specs = product_specs(countries=("SE", "DE", "PL"), horizon_h=48,
+                          products=("FFR",))
+    batch = build_scenario_batch(specs)
+    base = eng.EngineConfig(with_seconds=False, rho_mode="tier3")
+    blind = eng.engine_rollout(base, batch)
+    aware = eng.engine_rollout(
+        dataclasses.replace(base, price_aware=True), batch)
+    mu_b, rho_b = np.asarray(blind["mean_mu"]), np.asarray(blind["mean_rho"])
+    mu_a, rho_a = np.asarray(aware["mean_mu"]), np.asarray(aware["mean_rho"])
+    assert not (np.allclose(mu_a, mu_b) and np.allclose(rho_a, rho_b))
+    # revenue can only make holding a band more attractive, never less
+    assert rho_a.mean() >= rho_b.mean() - 1e-6
+
+
+def test_engine_rollout_rejects_bad_reduce():
+    specs = product_specs(countries=("SE",), horizon_h=24)
+    batch = build_scenario_batch(specs)
+    with pytest.raises(ValueError, match="reduce"):
+        eng.engine_rollout(CFG, batch, reduce="everything")

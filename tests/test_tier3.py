@@ -31,6 +31,36 @@ def test_pue_aware_beats_blind_at_meter():
     assert qa >= qb
 
 
+def test_selection_jits_once_across_calls_and_instances():
+    """The grid search compiles at most once per (shape, static) combo:
+    a second same-shape call -- or a second Selector instance with
+    different scalar knobs -- must dispatch into the compile cache."""
+    sel = tier3.Tier3Selector(pue_aware=True)
+    ci = np.linspace(50.0, 600.0, 24)
+    t_amb = np.full(24, 15.0)
+    sel.select_day(ci, t_amb)                    # may trace (cold cache)
+    n1 = tier3.SELECT_TRACE_COUNT["n"]
+    sel.select_day(ci + 1.0, t_amb)              # same shapes: no re-trace
+    assert tier3.SELECT_TRACE_COUNT["n"] == n1
+    # new instance, different traced knobs (pue_design, weights): the
+    # selector passes them as operands, so still no re-trace
+    sel2 = tier3.Tier3Selector(pue_aware=True, pue_design=1.35, w_cfe=0.5)
+    sel2.select_day(ci, t_amb)
+    assert tier3.SELECT_TRACE_COUNT["n"] == n1
+
+
+def test_price_aware_objective_penalises_infeasible_bands():
+    """revenue_score prices the same clawback settle_reserve applies:
+    undeliverable bands (mu - rho below the fleet floor) score negative,
+    fully deliverable bands score positive."""
+    good = float(tier3.revenue_score(0.9, 0.2, 10.0, 0, pue_aware=True))
+    bad = float(tier3.revenue_score(0.4, 0.3, 10.0, 0, pue_aware=True))
+    assert good > 0.0
+    assert bad < 0.0
+    zero = float(tier3.revenue_score(0.9, 0.0, 10.0, 0, pue_aware=True))
+    assert zero == pytest.approx(0.0, abs=1e-6)
+
+
 def test_cap_table_monotone_and_bounded():
     t = tier3.cap_table(3, 900.0, 100.0, 300.0)
     assert t.shape == (len(tier3.MU_GRID), len(tier3.RHO_GRID))
