@@ -78,14 +78,16 @@ def engine_config(fast: bool = False, **overrides) -> engine_lib.EngineConfig:
     return dataclasses.replace(cfg, **overrides)
 
 
-def synthesize_inputs(cfg, batch):
-    """The (freq, loads) pair `engine_rollout` would synthesise itself;
-    prebuilt so the reference loop and both engine arms share one copy."""
+def synthesize_freq(cfg, batch):
+    """The (N, T) frequency traces `engine_rollout` would synthesise
+    itself; prebuilt so the reference loop and both engine arms share one
+    copy.  Demand rows are generated in-scan from the counter-based PRNG,
+    so no (N, T, H) loads buffer is materialised anywhere in E9."""
     n_seconds = int(batch.h_max) * 3600
     freq, _ = frequency.synthesize_frequency_batch(
         frequency_seeds(batch), batch.product_idx, n_seconds=n_seconds,
         events_per_day=cfg.events_per_day, max_events=cfg.max_freq_events)
-    return freq, engine_lib.base_loads(cfg, batch)
+    return freq
 
 
 def reference_loop(batch, freq_np, mu_np, *, pue_aware: bool = True) -> list:
@@ -156,7 +158,7 @@ def price_aware_points(fast: bool = False) -> dict:
 def run(fast: bool = False) -> dict:
     specs, batch = build_e9_batch(fast)
     cfg = engine_config(fast)
-    freq, loads = synthesize_inputs(cfg, batch)
+    freq = synthesize_freq(cfg, batch)
     scenario_days = batch.n * int(batch.h_max) / 24.0
     emit("e9.n_scenarios", batch.n,
          "one fused jit(vmap(scan)) over all tiers")
@@ -167,7 +169,7 @@ def run(fast: bool = False) -> dict:
     def sweep(pue_aware: bool) -> dict:
         c = dataclasses.replace(cfg, pue_aware=pue_aware)
         return jax.tree.map(np.asarray, engine_lib.engine_rollout(
-            c, batch, freq=freq, loads=loads))
+            c, batch, freq=freq))
 
     out = sweep(True)
     blind = sweep(False)
@@ -192,7 +194,7 @@ def run(fast: bool = False) -> dict:
         return best
 
     t_engine = timed(lambda: engine_lib.engine_rollout(
-        cfg, batch, freq=freq, loads=loads), lambda r: r["net_eur"])
+        cfg, batch, freq=freq), lambda r: r["net_eur"])
     t_loop = timed(lambda: reference_loop(batch, freq_np, mu_np),
                    lambda r: np.asarray(0.0))
     emit("e9.vmap_scen_per_s", round(batch.n / t_engine, 1),

@@ -22,17 +22,23 @@ fused engine beats the status-quo composition --
   + reserve_replay_batch      (the separate detection vmap(scan))
 
 -- by ``MIN_SPEEDUP_X``.  CI runs the same gate in ``--fast`` mode
-(``FAST_MIN_SPEEDUP_X``).
+(``FAST_MIN_SPEEDUP_X``).  The fused arm runs the engine's default
+input path -- demand rows generated in-scan from the counter-based PRNG
+(O(N*H) inputs) -- while the separate arm still consumes the
+materialised (N, T, H) archetype buffer its ``TwinInputs`` expansion
+needs, built outside the timed region (it is seed-only data a status-quo
+sweep could cache across sweeps, so timing it would flatter the engine).
 
 Measured on the 2-core reference container (best-of-2, solo): at
-288 scenario-days fused 54.3 s vs separate 72.2 s (1.33x; the twin scan
-itself is ~62 s of the separate total -- the fused tick walks the
-seconds axis once AND skips the per-second input expansion); at the CI
-smoke scale (288 scenario-hours) 2.0x, because the O(N) host-side
+288 scenario-days fused 56.1 s vs separate 67.6 s (1.21x; the twin scan
+is the bulk of the separate total -- the fused hierarchical hour/second
+scan walks the seconds axis once, hoists the hourly table gathers to the
+outer level, AND skips the per-second input expansion); at the CI smoke
+scale (288 scenario-hours) 1.65x, because the O(N) host-side
 expansion/stacking/summary work the engine deletes dominates short
 horizons.  The floors below sit ~20 % under the measured ratios so the
 gate trips on a real regression (e.g. an op-count blow-up in the fused
-tick), not on CI noise.
+tick or the in-scan synthesis), not on CI noise or in-suite contention.
 """
 from __future__ import annotations
 
@@ -44,7 +50,7 @@ import numpy as np
 
 from benchmarks.common import emit, save_json
 from benchmarks.e9_reserve import build_e9_batch, engine_config, \
-    synthesize_inputs
+    synthesize_freq
 import repro.core.engine as engine_lib
 import repro.core.reserve as reserve
 import repro.core.twin as twin_lib
@@ -52,8 +58,18 @@ from repro.grid import frequency, signals
 from repro.grid.scenarios import build_scenario_batch, frequency_seeds, \
     product_specs
 
-MIN_SPEEDUP_X = 1.1         # full run: 288 scenario-days (measured 1.33x)
-FAST_MIN_SPEEDUP_X = 1.5    # CI smoke: 288 scenario-hours (measured 2.0x)
+MIN_SPEEDUP_X = 1.05        # full run: 288 scenario-days (measured 1.21x)
+FAST_MIN_SPEEDUP_X = 1.3    # CI smoke: 288 scenario-hours (measured 1.65x
+#                             solo; ~20 % under that so in-suite CPU
+#                             contention does not trip the gate, see the
+#                             module docstring's measurement notes)
+# sharded sweep vs the single-device path, same process.  Measured 2.66x
+# at 8 simulated host devices on the 2-core reference container (the
+# per-device programs give the scan parallelism the single-device
+# sequential scan cannot reach, and the blockwise trig-of-time synthesis
+# is shared per device program).  Floor kept well under the measurement:
+# shared CI runners vary in core count and contention.
+SHARDED_MIN_SPEEDUP_X = 1.3
 
 
 def bench_batch(fast: bool = False):
@@ -121,27 +137,59 @@ def _separate_sweep(cfg, batch, loads, freq, mu_h, rho_h, ev_lists, grids,
     return summaries, res
 
 
+def _timed(fn, sync, reps: int = 2):
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        sync(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def bench_scenario_keys(n: int = 1000, reps: int = 2) -> dict:
+    """scenario_keys at N=1000: ONE vmapped PRNGKey+split dispatch vs the
+    former per-scenario ``jax.random.split`` Python loop."""
+    seeds = jnp.arange(n, dtype=jnp.int32)
+    seeds_np = np.asarray(seeds)
+
+    def loop():
+        pairs = [jax.random.split(jax.random.PRNGKey(int(s)))
+                 for s in seeds_np]
+        return jnp.stack([p[0] for p in pairs])
+
+    vec = lambda: engine_lib._scenario_keys_jit(seeds)[0]  # noqa: E731
+    sync = jax.block_until_ready
+    sync(vec())                              # compile + warm
+    t_vec = _timed(vec, sync, reps)
+    t_loop = _timed(loop, sync, reps)
+    emit(f"engine.scenario_keys_n{n}.loop_s", round(t_loop, 3),
+         "one split dispatch per scenario")
+    emit(f"engine.scenario_keys_n{n}.vmap_s", round(t_vec, 4),
+         "one vmapped PRNGKey+split dispatch")
+    emit(f"engine.scenario_keys_n{n}.speedup_x", round(t_loop / t_vec, 1),
+         "")
+    return dict(n=n, t_loop=t_loop, t_vec=t_vec, speedup_x=t_loop / t_vec)
+
+
 def run(fast: bool = False, reps: int = 2) -> dict:
     batch = bench_batch(fast)
     cfg = engine_config(fast)
-    freq, loads = synthesize_inputs(cfg, batch)
+    freq = synthesize_freq(cfg, batch)
+    # the separate (status-quo) arm still consumes the materialised
+    # (N, T, H) archetype buffer; the fused engine generates rows in-scan
+    loads = engine_lib.base_loads(cfg, batch)
     scenario_days = batch.n * int(batch.h_max) / 24.0
     emit("engine.n_scenarios", batch.n, "")
     emit("engine.scenario_days", round(scenario_days, 2),
          "1 Hz seconds replayed per pass")
 
     def timed(fn, sync):
-        best = float("inf")
-        for _ in range(reps):
-            t0 = time.perf_counter()
-            sync(fn())
-            best = min(best, time.perf_counter() - t0)
-        return best
+        return _timed(fn, sync, reps)
 
     # -- fused single pass: twin + reserve + energy + settlement, summary
-    #    aggregates only (no per-second expansion, no (N,T,H) stacks) ------
-    fused = lambda: engine_lib.engine_rollout(cfg, batch, freq=freq,  # noqa: E731
-                                              loads=loads)
+    #    aggregates only (no per-second expansion, no (N,T,H) stacks, and
+    #    demand generated in-scan: inputs are O(N*H)) ----------------------
+    fused = lambda: engine_lib.engine_rollout(cfg, batch, freq=freq)  # noqa: E731
     out = fused()                            # compile + warm
     jax.block_until_ready(out["net_eur"])
     t_fused = timed(fused, lambda r: jax.block_until_ready(r["net_eur"]))
@@ -174,11 +222,69 @@ def run(fast: bool = False, reps: int = 2) -> dict:
     floor = FAST_MIN_SPEEDUP_X if fast else MIN_SPEEDUP_X
     res = dict(n_scenarios=batch.n, scenario_days=scenario_days,
                t_fused=t_fused, t_separate=t_sep,
-               speedup_x=speedup, floor=floor)
+               speedup_x=speedup, floor=floor,
+               scenario_keys=bench_scenario_keys())
     save_json("engine_bench.json", res)
     assert speedup >= floor, (
         f"fused engine regression: {speedup:.2f}x < {floor}x "
         f"(fused {t_fused:.2f}s vs separate {t_sep:.2f}s)")
+    return res
+
+
+def run_sharded(fast: bool = False, reps: int = 3) -> dict:
+    """`engine_sharded`: the shard_map sweep vs the single-device path.
+
+    Replays the same batch through ``engine_rollout`` with and without a
+    scenario mesh in one process, **asserts** the sharded summary matches
+    the single-device one to fp32 reassociation tolerance, and asserts
+    >= SHARDED_MIN_SPEEDUP_X throughput.  Needs >= 2 local devices -- CI
+    simulates 8 with ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+    (the flag must be set before the process starts); on one device the
+    entry emits a skip row instead of failing.
+    """
+    n_dev = len(jax.devices())
+    emit("engine_sharded.devices", n_dev, "")
+    if n_dev < 2:
+        emit("engine_sharded.skipped", 1,
+             "one device: set XLA_FLAGS=--xla_force_host_platform_"
+             "device_count=8 before starting the process")
+        return dict(skipped=True, devices=n_dev)
+    batch = bench_batch(fast)
+    cfg = engine_config(fast)
+    freq = synthesize_freq(cfg, batch)
+    single = lambda: engine_lib.engine_rollout(cfg, batch, freq=freq)  # noqa: E731
+    sharded = lambda: engine_lib.engine_rollout(cfg, batch, freq=freq,  # noqa: E731
+                                                mesh="auto")
+    out_1 = jax.tree.map(np.asarray, single())       # compile + warm
+    out_d = jax.tree.map(np.asarray, sharded())
+    for k in ("it_mwh", "fac_mwh", "net_eur", "sched_co2_t"):
+        np.testing.assert_allclose(out_d[k], out_1[k], rtol=1e-3, atol=1e-4,
+                                   err_msg=f"sharded parity: {k}")
+    for k in ("ar4_mae_norm", "tracking_err_mean"):
+        # RLS error metrics chaotically amplify 1-ulp reassociation noise
+        np.testing.assert_allclose(out_d[k], out_1[k], rtol=2e-2,
+                                   err_msg=f"sharded parity: {k}")
+    np.testing.assert_array_equal(out_d["n_events"], out_1["n_events"])
+    emit("engine_sharded.parity_fp32", 1,
+         "sharded summary == single-device summary")
+
+    sync = lambda r: jax.block_until_ready(r["net_eur"])  # noqa: E731
+    t_1 = _timed(single, sync, reps)
+    t_d = _timed(sharded, sync, reps)
+    speedup = t_1 / t_d
+    emit("engine_sharded.single_s", round(t_1, 2), "")
+    emit("engine_sharded.sharded_s", round(t_d, 2),
+         f"shard_map over {n_dev} devices, scenario axis")
+    emit("engine_sharded.speedup_x", round(speedup, 2),
+         f"gate: >= {SHARDED_MIN_SPEEDUP_X}x")
+    res = dict(devices=n_dev, n_scenarios=batch.n, t_single=t_1,
+               t_sharded=t_d, speedup_x=speedup,
+               floor=SHARDED_MIN_SPEEDUP_X)
+    save_json("engine_sharded.json", res)
+    assert speedup >= SHARDED_MIN_SPEEDUP_X, (
+        f"sharded sweep regression: {speedup:.2f}x < "
+        f"{SHARDED_MIN_SPEEDUP_X}x on {n_dev} devices "
+        f"(sharded {t_d:.2f}s vs single {t_1:.2f}s)")
     return res
 
 

@@ -40,6 +40,8 @@ def main(argv=None) -> int:
          lambda: e8_multicountry.run_batched_bench(fast=args.fast)),
         ("e9", lambda: e9_reserve.run(fast=args.fast)),
         ("engine", lambda: engine_bench.run(fast=args.fast)),
+        ("engine_sharded",
+         lambda: engine_bench.run_sharded(fast=args.fast)),
         ("fig4", lambda: cluster_24h.run(fast=args.fast)),
         ("roofline", lambda: roofline.emit_table()),
     ]

@@ -32,20 +32,33 @@ batch size, not horizon.  ``reduce="full"`` additionally stacks the
 per-second :class:`~repro.core.twin.TwinMetrics` (the parity surface the
 tests pin against the hand-stitched composition).
 
+Inputs are O(N*H) too: the rollout scan is hierarchical -- an outer scan
+over hours, an inner scan over each hour's 3600 seconds -- and the outer
+level generates its hour's demand block from the counter-based PRNG
+(``twin.host_loads_block``, ``jax.random.fold_in`` on the scenario load
+key and the hour index) and gathers the hourly tables once per hour, so
+no ``(N, T, H)`` input buffer exists unless the caller passes a measured
+``loads=`` override (validated up front; :func:`base_loads` materialises
+the same trace -- identical PRNG bits, float path within 1 ulp).
+
 The scan carry is a flat pytree and every per-scenario input carries a
-leading batch axis, so the next scaling step (``shard_map`` over the
-scenario axis with donated carries) is a one-line wrapper around
-``_engine_seconds_jit``.
+leading batch axis, which is what lets ``engine_rollout(mesh=...)`` wrap
+the same vmapped rollout in ``shard_map`` over a ``"scenario"`` mesh
+axis: the batch is auto-padded to a multiple of the device count
+(replicating the last scenario), each device scans its slice, and the
+outputs are sliced back -- single-device numbers to fp32 tolerance.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
+from functools import lru_cache, partial
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 import repro.core.dispatch as dispatch
 import repro.core.plant as plant_lib
@@ -174,37 +187,38 @@ def engine_init(cfg: EngineConfig, key) -> EngineState:
     )
 
 
-def engine_step(cfg: EngineConfig, params: EngineParams, state: EngineState,
-                xs):
-    """One fused 1 Hz tick.
+class HourParams(NamedTuple):
+    """One hour's scalars, gathered from :class:`EngineParams` ONCE per
+    hour by the rollout's outer scan level (not once per tick)."""
 
-    xs = (base_load (H,), below bool, in_hor bool, t int32): the per-host
-    demand archetype row (unscaled), the frequency-below-trigger flag, the
-    ragged-horizon gate, and the second index.  Order of operations:
+    mu: jax.Array
+    rho: jax.Array
+    t_amb: jax.Array
+    rho_it: jax.Array
+    min_dur_i: jax.Array
+    pue_design: jax.Array
 
-      1. reserve detection state machine (identical to the standalone
-         ``reserve.reserve_replay`` scan -- event times match exactly),
-      2. the twin tick with the detected shed driving the FFR duty shed
-         (the activation actually takes power out of the plant),
-      3. streaming aggregate update.
 
-    Returns (state, (EngineSecond, TwinMetrics)).
-    """
-    base_load, below, in_hor, t = xs
+def _hour_params(params: EngineParams, hour) -> HourParams:
     h_max = params.mu_h.shape[-1]
-    hour = jnp.minimum(t // 3600, h_max - 1)
-    mu = params.mu_h[hour]
-    rho = params.rho_h[hour]
-    t_amb = params.t_amb_h[hour]
+    hour = jnp.minimum(hour, h_max - 1)
+    return HourParams(
+        mu=params.mu_h[hour], rho=params.rho_h[hour],
+        t_amb=params.t_amb_h[hour], rho_it=params.rho_it_h[hour],
+        min_dur_i=params.min_dur_i, pue_design=params.pue_design)
 
+
+def _engine_tick(cfg: EngineConfig, hp: HourParams, state: EngineState, xs):
+    """The fused 1 Hz tick body with the hour's scalars already gathered."""
+    base_load, below, in_hor, t = xs
     (in_ev, hold), trig, shed = reserve.detection_step(
-        (state.in_event, state.hold), below, in_hor, params.min_dur_i)
+        (state.in_event, state.hold), below, in_hor, hp.min_dur_i)
 
-    load_h = base_load * mu / 0.9
+    load_h = base_load * hp.mu / 0.9
     carry = (state.rls, state.chip_power, state.caps, state.key)
     (rls, chip_power, caps, key), m = twin_lib.twin_tick(
-        cfg.n_hosts, cfg.chips_per_host, cfg.chip_tdp, params.pue_design,
-        carry, load_h, mu, rho, shed, t_amb)
+        cfg.n_hosts, cfg.chips_per_host, cfg.chip_tdp, hp.pue_design,
+        carry, load_h, hp.mu, hp.rho, shed, hp.t_amb)
 
     L = m.it_power / cfg.design_it_w
     g = in_hor.astype(jnp.float32)
@@ -221,12 +235,35 @@ def engine_step(cfg: EngineConfig, params: EngineParams, state: EngineState,
         chip_mean=a.chip_mean + g * m.chip_power_mean,
         chip_p95=a.chip_p95 + g * m.chip_power_p95,
         shed_s=a.shed_s + shed.astype(jnp.float32),
-        shed_it=a.shed_it + params.rho_it_h[hour] * shed,
+        shed_it=a.shed_it + hp.rho_it * shed,
     )
     sec = EngineSecond(trig=trig, shed=shed, load=state.last_load)
     new = EngineState(rls=rls, chip_power=chip_power, caps=caps, key=key,
                       last_load=L, in_event=in_ev, hold=hold, acc=acc)
     return new, (sec, m)
+
+
+def engine_step(cfg: EngineConfig, params: EngineParams, state: EngineState,
+                xs):
+    """One fused 1 Hz tick.
+
+    xs = (base_load (H,), below bool, in_hor bool, t int32): the per-host
+    demand archetype row (unscaled), the frequency-below-trigger flag, the
+    ragged-horizon gate, and the second index.  Order of operations:
+
+      1. reserve detection state machine (identical to the standalone
+         ``reserve.reserve_replay`` scan -- event times match exactly),
+      2. the twin tick with the detected shed driving the FFR duty shed
+         (the activation actually takes power out of the plant),
+      3. streaming aggregate update.
+
+    Returns (state, (EngineSecond, TwinMetrics)).  The rollout's own scan
+    walks hours and gathers the hourly tables once per hour
+    (:func:`_hour_params`); this per-tick entry point gathers them from
+    ``t`` and runs the identical tick body.
+    """
+    t = xs[3]
+    return _engine_tick(cfg, _hour_params(params, t // 3600), state, xs)
 
 
 # ---------------------------------------------------------------------------
@@ -267,7 +304,7 @@ def _hourly_one(cfg: EngineConfig, ci, t_amb, mask, mw, pue_design,
 
 def _rollout_one(cfg: EngineConfig, reduce: str, ci, t_amb, mask, hours,
                  mw, pue_design, product_idx, rho_batch, freq, base_loads,
-                 key) -> dict:
+                 load_key, key) -> dict:
     out = _hourly_one(cfg, ci, t_amb, mask, mw, pue_design, product_idx,
                       rho_batch)
     mu_h, rho_h = out["mu_h"], out["rho_h"]
@@ -287,16 +324,42 @@ def _rollout_one(cfg: EngineConfig, reduce: str, ci, t_amb, mask, hours,
                           rho_it_h=vh["rho_it"],
                           min_dur_i=min_dur_f.astype(jnp.int32),
                           pue_design=pue_design)
-    below_t = freq < trig_hz
-    in_hor_t = jnp.arange(T, dtype=jnp.int32) < valid_s
-    xs = (base_loads, below_t, in_hor_t, jnp.arange(T, dtype=jnp.int32))
+    # --- the fused scan, walked hierarchically: an outer scan over hours
+    # and an inner scan over the hour's LOAD_BLOCK_S (= 3600) seconds.
+    # The outer level gathers the hourly tables once per hour and -- when
+    # no loads buffer was passed -- synthesises the hour's (K, H) demand
+    # block from the counter-based PRNG (one fold_in + one vectorised
+    # normal per hour, ~30 % cheaper than per-tick draws inside the
+    # body), so peak input memory stays O(H) per scenario per hour.
+    K = twin_lib.LOAD_BLOCK_S
+    B = T // K
+    below_b = (freq < trig_hz).reshape(B, K)
+    in_hor_b = (jnp.arange(T, dtype=jnp.int32) < valid_s).reshape(B, K)
+    hours_idx = jnp.arange(B, dtype=jnp.int32)
+    lp = (twin_lib.host_load_params(cfg.n_hosts, load_key)
+          if base_loads is None else None)
+    xs = ((below_b, in_hor_b, hours_idx) if base_loads is None else
+          (base_loads.reshape(B, K, -1), below_b, in_hor_b, hours_idx))
 
-    def body(state, x):
-        state, (sec, m) = engine_step(cfg, params, state, x)
-        return state, ((sec, m) if reduce == "full" else sec)
+    def hour_body(state, xb):
+        if base_loads is None:
+            below_r, in_r, b = xb
+            loads_r = twin_lib.host_loads_block(lp, b)
+        else:
+            loads_r, below_r, in_r, b = xb
+        hp = _hour_params(params, b)
+        t_row = b * K + jnp.arange(K, dtype=jnp.int32)
 
-    state, ys = jax.lax.scan(body, engine_init(cfg, key), xs,
-                             unroll=cfg.unroll)
+        def tick(st, x):
+            st, (sec, m) = _engine_tick(cfg, hp, st, x)
+            return st, ((sec, m) if reduce == "full" else sec)
+
+        return jax.lax.scan(tick, state, (loads_r, below_r, in_r, t_row),
+                            unroll=cfg.unroll)
+
+    state, ys = jax.lax.scan(hour_body, engine_init(cfg, key), xs)
+    # flatten the (B, K, ...) stacks back to a seconds axis
+    ys = jax.tree.map(lambda a: a.reshape((T,) + a.shape[2:]), ys)
     sec, metrics = ys if reduce == "full" else (ys, None)
 
     # --- per-event verdicts -------------------------------------------------
@@ -354,21 +417,107 @@ def _rollout_one(cfg: EngineConfig, reduce: str, ci, t_amb, mask, hours,
     return out
 
 
-@partial(jax.jit, static_argnames=("cfg", "reduce"))
-def _engine_seconds_jit(cfg: EngineConfig, reduce: str, batch: ScenarioBatch,
-                        freq, base_loads, keys) -> dict:
+def _engine_seconds_vmapped(cfg: EngineConfig, reduce: str,
+                            batch: ScenarioBatch, freq, base_loads,
+                            load_keys, scan_keys) -> dict:
     fn = partial(_rollout_one, cfg, reduce)
     return jax.vmap(fn)(batch.ci, batch.t_amb, batch.mask, batch.hours,
                         batch.mw, batch.pue_design, batch.product_idx,
-                        batch.reserve_rho, freq, base_loads, keys)
+                        batch.reserve_rho, freq, base_loads, load_keys,
+                        scan_keys)
 
 
-@partial(jax.jit, static_argnames=("cfg",))
-def _engine_hourly_jit(cfg: EngineConfig, batch: ScenarioBatch) -> dict:
+@partial(jax.jit, static_argnames=("cfg", "reduce"))
+def _engine_seconds_jit(cfg: EngineConfig, reduce: str, batch: ScenarioBatch,
+                        freq, base_loads, load_keys, scan_keys) -> dict:
+    return _engine_seconds_vmapped(cfg, reduce, batch, freq, base_loads,
+                                   load_keys, scan_keys)
+
+
+def _engine_hourly_vmapped(cfg: EngineConfig, batch: ScenarioBatch) -> dict:
     fn = partial(_hourly_one, cfg)
     return jax.vmap(fn)(batch.ci, batch.t_amb, batch.mask, batch.mw,
                         batch.pue_design, batch.product_idx,
                         batch.reserve_rho)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def _engine_hourly_jit(cfg: EngineConfig, batch: ScenarioBatch) -> dict:
+    return _engine_hourly_vmapped(cfg, batch)
+
+
+# ---------------------------------------------------------------------------
+# Device-sharded sweep: shard_map over a "scenario" mesh axis
+# ---------------------------------------------------------------------------
+
+_SCENARIO_AXIS = "scenario"
+
+
+def _resolve_mesh(mesh):
+    """mesh= argument -> a validated Mesh with a "scenario" axis."""
+    if mesh == "auto":
+        from repro.launch.mesh import make_scenario_mesh
+        mesh = make_scenario_mesh()
+    if _SCENARIO_AXIS not in mesh.axis_names:
+        raise ValueError(
+            f"engine mesh needs a {_SCENARIO_AXIS!r} axis, got mesh axes "
+            f"{mesh.axis_names}")
+    return mesh
+
+
+def pad_scenario_axis(tree, multiple: int):
+    """Right-pad the leading (scenario) axis of every leaf to a multiple
+    of ``multiple`` by repeating the last scenario.
+
+    Replicated real scenarios keep every padded lane numerically
+    well-defined (no zero-hour division edge cases); the caller slices
+    the outputs back with :func:`unpad_scenario_axis`.  Returns
+    ``(padded_tree, original_n)``.
+    """
+    leaves = jax.tree.leaves(tree)
+    n = int(leaves[0].shape[0])
+    pad = (-n) % multiple
+    if pad == 0:
+        return tree, n
+    return jax.tree.map(
+        lambda x: jnp.concatenate(
+            [x, jnp.broadcast_to(x[-1:], (pad,) + x.shape[1:])]), tree), n
+
+
+def unpad_scenario_axis(tree, n: int):
+    """Slice the leading (scenario) axis of every leaf back to ``n``."""
+    return jax.tree.map(lambda x: x[:n], tree)
+
+
+@lru_cache(maxsize=None)
+def _sharded_seconds_fn(cfg: EngineConfig, reduce: str, mesh,
+                        has_loads: bool):
+    """jit(shard_map(vmap(rollout))) over the scenario axis, cached per
+    (static config, mesh) so repeated sweeps reuse the compiled program.
+
+    Every input leaf and every output leaf carries a leading scenario
+    axis and the per-scenario rollouts are independent (no collectives),
+    so in/out specs are uniformly P("scenario"); each device runs the
+    same fused scan over its N/n_dev slice of the batch.
+    """
+    del has_loads  # cache key only: the loads arg changes the arg pytree
+    spec = P(_SCENARIO_AXIS)
+
+    def run(batch, freq, base_loads, load_keys, scan_keys):
+        return _engine_seconds_vmapped(cfg, reduce, batch, freq, base_loads,
+                                       load_keys, scan_keys)
+
+    return jax.jit(shard_map(
+        run, mesh=mesh, in_specs=(spec, spec, spec, spec, spec),
+        out_specs=spec, check_rep=False))
+
+
+@lru_cache(maxsize=None)
+def _sharded_hourly_fn(cfg: EngineConfig, mesh):
+    return jax.jit(shard_map(
+        partial(_engine_hourly_vmapped, cfg), mesh=mesh,
+        in_specs=(P(_SCENARIO_AXIS),), out_specs=P(_SCENARIO_AXIS),
+        check_rep=False))
 
 
 # ---------------------------------------------------------------------------
@@ -376,36 +525,46 @@ def _engine_hourly_jit(cfg: EngineConfig, batch: ScenarioBatch) -> dict:
 # ---------------------------------------------------------------------------
 
 
+@jax.jit
+def _scenario_keys_jit(seeds) -> tuple[jax.Array, jax.Array]:
+    keys = jax.vmap(jax.random.PRNGKey)(seeds)
+    pairs = jax.vmap(partial(jax.random.split, num=2))(keys)
+    return pairs[:, 0], pairs[:, 1]
+
+
 def scenario_keys(batch: ScenarioBatch) -> tuple[jax.Array, jax.Array]:
     """Per-scenario (load_key, scan_key): the same split the twin's
-    ``prepare_scenario`` makes from ``PRNGKey(seed)``."""
-    seeds = np.asarray(batch.seed)
-    pairs = [jax.random.split(jax.random.PRNGKey(int(s))) for s in seeds]
-    return (jnp.stack([p[0] for p in pairs]),
-            jnp.stack([p[1] for p in pairs]))
+    ``prepare_scenario`` makes from ``PRNGKey(seed)``, as ONE vmapped
+    dispatch (bit-exact vs the former per-scenario split loop, which cost
+    one device round-trip per scenario)."""
+    return _scenario_keys_jit(jnp.asarray(batch.seed))
 
 
 def base_loads(cfg: EngineConfig, batch: ScenarioBatch) -> jax.Array:
-    """(N, T, H) unscaled per-host demand archetypes (twin `_host_loads`).
+    """(N, T, H) unscaled per-host demand archetypes, materialised.
 
-    Scenarios sharing a seed share the trace; the per-hour ``mu`` scaling
-    happens inside the scan tick, so this is the only (N, T, H) buffer the
-    rollout touches and it is an *input*, never a stacked output.
+    The rollout itself no longer needs this buffer -- the scan generates
+    each second's row in-scan from the counter-based PRNG (see
+    ``twin.host_loads_at``) -- but parity tests, the benchmark baselines
+    and measured-data replays still want the explicit (N, T, H) input, so
+    it is kept as the reference materialisation of the same trace.
+    Scenarios sharing a seed share the trace.
     """
     T = int(batch.h_max) * 3600
-    tw = cfg.twin_config(T)
     load_keys, _ = scenario_keys(batch)
     cache: dict[int, jax.Array] = {}
     rows = []
     for i, s in enumerate(np.asarray(batch.seed)):
         if int(s) not in cache:
-            cache[int(s)] = twin_lib._host_loads(tw, load_keys[i])
+            cache[int(s)] = twin_lib.host_loads_trace(
+                cfg.n_hosts, T, load_keys[i])
         rows.append(cache[int(s)])
     return jnp.stack(rows)
 
 
 def engine_rollout(cfg: EngineConfig, batch: ScenarioBatch, *,
-                   reduce: str = "summary", freq=None, loads=None) -> dict:
+                   reduce: str = "summary", freq=None, loads=None,
+                   mesh=None) -> dict:
     """Replay a ScenarioBatch through all composed tiers in ONE compiled
     ``jit(vmap(lax.scan))`` call.
 
@@ -416,24 +575,54 @@ def engine_rollout(cfg: EngineConfig, batch: ScenarioBatch, *,
                       (N, T) trigger/shed/load traces (the parity surface).
 
     ``freq``/``loads`` override the synthesised 1 Hz frequency traces and
-    demand archetypes (e.g. to replay measured data); defaults synthesise
-    from the batch's seeds.  With ``cfg.with_seconds=False`` only the
-    hourly tiers run and neither input is touched.
+    demand archetypes (e.g. to replay measured data); both are validated
+    against the batch's (N, T = h_max*3600) shape up front.  By default
+    ``freq`` is synthesised from the batch's seeds and the demand rows
+    are generated *in-scan* from the counter-based PRNG, so the rollout's
+    peak input memory is O(N*H_max) -- no (N, T, H) buffer exists unless
+    the caller materialises one.
+
+    ``mesh`` shards the sweep over devices: pass a Mesh with a
+    ``"scenario"`` axis (see ``repro.launch.mesh.make_scenario_mesh``) or
+    ``"auto"`` for a 1-D mesh over every local device.  The batch is
+    right-padded to a multiple of the device count by replicating the
+    last scenario, each device scans its slice via ``shard_map``, and the
+    outputs are sliced back -- same results as the single-device path to
+    fp32 reassociation tolerance.  With ``cfg.with_seconds=False`` only
+    the hourly tiers run (sharded the same way when ``mesh`` is given).
     """
     if reduce not in ("summary", "full"):
         raise ValueError(f"reduce must be 'summary' or 'full', got {reduce!r}")
+    if mesh is not None:
+        mesh = _resolve_mesh(mesh)
     if not cfg.with_seconds:
-        return _engine_hourly_jit(cfg, batch)
-    T = int(batch.h_max) * 3600
+        if mesh is None:
+            return _engine_hourly_jit(cfg, batch)
+        padded, n = pad_scenario_axis(batch, mesh.shape[_SCENARIO_AXIS])
+        return unpad_scenario_axis(_sharded_hourly_fn(cfg, mesh)(padded), n)
+    n, T = batch.n, int(batch.h_max) * 3600
     if freq is None:
         freq, _ = frequency.synthesize_frequency_batch(
             frequency_seeds(batch), batch.product_idx, n_seconds=T,
             events_per_day=cfg.events_per_day,
             max_events=cfg.max_freq_events)
-    if loads is None:
-        loads = base_loads(cfg, batch)
-    _, scan_keys = scenario_keys(batch)
-    return _engine_seconds_jit(cfg, reduce, batch, freq, loads, scan_keys)
+    elif freq.shape != (n, T):
+        raise ValueError(
+            f"freq override must have shape (N, T) = ({n}, {T}) = "
+            f"(batch.n, batch.h_max * 3600), got {freq.shape}")
+    if loads is not None and loads.shape != (n, T, cfg.n_hosts):
+        raise ValueError(
+            f"loads override must have shape (N, T, H) = "
+            f"({n}, {T}, {cfg.n_hosts}) = (batch.n, batch.h_max * 3600, "
+            f"cfg.n_hosts), got {loads.shape}")
+    load_keys, scan_keys = scenario_keys(batch)
+    if mesh is None:
+        return _engine_seconds_jit(cfg, reduce, batch, freq, loads,
+                                   load_keys, scan_keys)
+    args, n = pad_scenario_axis((batch, freq, loads, load_keys, scan_keys),
+                                mesh.shape[_SCENARIO_AXIS])
+    fn = _sharded_seconds_fn(cfg, reduce, mesh, loads is not None)
+    return unpad_scenario_axis(fn(*args), n)
 
 
 def summarize_rollout(cfg: EngineConfig, batch: ScenarioBatch,

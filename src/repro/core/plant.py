@@ -115,6 +115,13 @@ BURSTY_PERIOD_S = 4.0
 BURSTY_DUTY = 0.5
 BURSTY_LOW = 0.05
 BURSTY_EDGE_JITTER_S = 0.12
+# shared wave constants of the archetype synthesis: the slow-wander
+# sinusoid bank and the bursty edge-jitter frequency.  Consumed both here
+# (workload_load, the per-trace reference) and by the twin's counter-based
+# block synthesis (twin.host_loads_block) -- one source of truth so the
+# two load models cannot silently diverge.
+SLOW_FREQS_HZ = (0.031, 0.073, 0.127, 0.211)   # ~10-30 s waves
+BURSTY_JITTER_FREQ_HZ = 0.017
 
 
 def workload_tau_ms(workload: str) -> float:
@@ -132,7 +139,7 @@ def workload_load(workload: str, t_s, key, phase=0.0):
     t = jnp.asarray(t_s, jnp.float32)
     k1, k2, k3 = jax.random.split(key, 3)
     ph = jax.random.uniform(k1, (4,), minval=0.0, maxval=2 * jnp.pi)
-    freqs = jnp.asarray([0.031, 0.073, 0.127, 0.211])  # Hz, ~10-30 s waves
+    freqs = jnp.asarray(SLOW_FREQS_HZ)
     slow = jnp.sum(
         jnp.sin(2 * jnp.pi * freqs * t[..., None] + ph), axis=-1
     ) / 2.0
@@ -140,7 +147,8 @@ def workload_load(workload: str, t_s, key, phase=0.0):
     base = a["mean"] + a["slow_sigma"] * slow + a["fast_sigma"] * fast
     if workload == "bursty":
         jit_t = BURSTY_EDGE_JITTER_S * jnp.sin(
-            2 * jnp.pi * 0.017 * t + jax.random.uniform(k3, (), maxval=6.28)
+            2 * jnp.pi * BURSTY_JITTER_FREQ_HZ * t
+            + jax.random.uniform(k3, (), maxval=6.28)
         )
         frac = jnp.mod((t + jit_t) / BURSTY_PERIOD_S + phase, 1.0)
         on = frac < BURSTY_DUTY

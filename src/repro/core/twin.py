@@ -71,26 +71,125 @@ class TwinConfig:
         return self.n_chips * self.chip_tdp
 
 
-def _host_loads(cfg: TwinConfig, key) -> jax.Array:
-    """Per-host mean-utilisation demand profile at 1 Hz, (T, H).
+class HostLoadParams(NamedTuple):
+    """O(H) per-scenario constants of the counter-based 1 Hz load synthesis.
 
-    A mix of the three archetypes across hosts: 50 % matmul-like (training),
-    30 % inference, 20 % bursty, with per-host phase offsets.
+    Everything :func:`host_loads_block` needs to produce the demand rows
+    of ANY hour block from the scenario's load key alone -- archetype
+    stats, per-host slow-wave/jitter phases, and the white-noise key that
+    is ``fold_in``-ed with the block index.  Replaces the materialised
+    (T, H) trace as the engine's load input: O(H) instead of O(T*H).
     """
-    t = jnp.arange(cfg.seconds, dtype=jnp.float32)
-    keys = jax.random.split(key, cfg.n_hosts)
-    kinds = np.array([0] * (cfg.n_hosts // 2)
-                     + [1] * (3 * cfg.n_hosts // 10)
-                     + [2] * (cfg.n_hosts - cfg.n_hosts // 2
-                              - 3 * cfg.n_hosts // 10))
 
-    def one(kind, k):
-        w = ("matmul", "inference", "bursty")[int(kind)]
-        phase = float(int(kind) * 0.37)
-        return plant_lib.workload_load(w, t, k, phase=phase)
+    mean: jax.Array        # (H,) archetype mean utilisation
+    fast_sigma: jax.Array  # (H,) white-noise sigma
+    slow_sigma: jax.Array  # (H,) band-limited wander sigma
+    phases: jax.Array      # (H, 4) slow-wave phase offsets
+    is_bursty: jax.Array   # (H,) bool: duty-cycled archetype
+    duty_phase: jax.Array  # (H,) bursty duty-cycle phase offset
+    jitter_ph: jax.Array   # (H,) bursty edge-jitter phase
+    fast_key: jax.Array    # PRNG key; fold_in(block) -> the block's noise
 
-    cols = [one(kinds[i], keys[i]) for i in range(cfg.n_hosts)]
-    return jnp.stack(cols, axis=1)  # (T, H)
+
+_SLOW_FREQS_HZ = jnp.asarray(plant_lib.SLOW_FREQS_HZ)
+
+# Counter-based synthesis granularity: the PRNG counter is the hour-sized
+# block index, so one fold_in + one normal((3600, H)) draw serves 3600
+# ticks.  Per-*second* counters measure ~30 % overhead on the fused
+# engine tick (2 threefry dispatches + erfinv per tick inside the scan
+# body); per-hour blocks amortise them into one vectorised draw that the
+# engine's outer (hourly) scan level generates, keeping live input
+# memory O(BLOCK * H) per scenario -- constant in the horizon T.
+LOAD_BLOCK_S = 3600
+
+
+def _host_kinds(n_hosts: int) -> np.ndarray:
+    """Archetype mix across hosts: 50 % matmul-like (training), 30 %
+    inference, 20 % bursty."""
+    return np.array([0] * (n_hosts // 2)
+                    + [1] * (3 * n_hosts // 10)
+                    + [2] * (n_hosts - n_hosts // 2 - 3 * n_hosts // 10))
+
+
+def host_load_params(n_hosts: int, key) -> HostLoadParams:
+    """Scenario load key -> the O(H) constants of the per-second synthesis."""
+    kinds = _host_kinds(n_hosts)
+    stats = np.array([[plant_lib._ARCHETYPES[w][f] for w in
+                       ("matmul", "inference", "bursty")]
+                      for f in ("mean", "fast_sigma", "slow_sigma")],
+                     np.float32)[:, kinds]                      # (3, H)
+    k_fast, k_ph, k_jit = jax.random.split(key, 3)
+    return HostLoadParams(
+        mean=jnp.asarray(stats[0]),
+        fast_sigma=jnp.asarray(stats[1]),
+        slow_sigma=jnp.asarray(stats[2]),
+        phases=jax.random.uniform(k_ph, (n_hosts, 4), minval=0.0,
+                                  maxval=2 * jnp.pi),
+        is_bursty=jnp.asarray(kinds == 2),
+        duty_phase=jnp.asarray(kinds * 0.37, jnp.float32),
+        jitter_ph=jax.random.uniform(k_jit, (n_hosts,), maxval=6.28),
+        fast_key=k_fast,
+    )
+
+
+def host_loads_block(p: HostLoadParams, b) -> jax.Array:
+    """The (LOAD_BLOCK_S, H) demand rows of hour-block ``b``, from the
+    counter-based PRNG.
+
+    Pure function of (params, block index): ``fold_in(fast_key, b)``
+    seeds the block's white noise and everything else is a vectorised
+    function of the absolute second, so a scan level that walks hours can
+    synthesise its own demand input instead of gathering from a
+    materialised (T, H) buffer.  The trace builder
+    :func:`host_loads_trace` is the vmap of this function over blocks --
+    identical PRNG bits by construction, float path within 1 ulp (XLA
+    reassociates the slow-wave sum differently under vmap).
+    """
+    t0 = jnp.asarray(b, jnp.int32) * LOAD_BLOCK_S
+    tf = (jnp.asarray(t0, jnp.float32)
+          + jnp.arange(LOAD_BLOCK_S, dtype=jnp.float32))        # (K,)
+    fast = jax.random.normal(jax.random.fold_in(p.fast_key, b),
+                             (LOAD_BLOCK_S,) + p.mean.shape)    # (K, H)
+    # sin(w t + ph) expanded by angle addition: the trig-of-time factors
+    # depend only on the block index, so under the engine's vmap over
+    # scenarios they are computed ONCE for the whole batch (the libm sin
+    # calls are what dominates the synthesis otherwise); each scenario
+    # pays only the tiny per-host phase contraction.
+    ang = 2 * jnp.pi * _SLOW_FREQS_HZ * tf[:, None]             # (K, 4)
+    s_t, c_t = jnp.sin(ang), jnp.cos(ang)
+    slow = (s_t @ jnp.cos(p.phases).T + c_t @ jnp.sin(p.phases).T) / 2.0
+    base = p.mean + p.slow_sigma * slow + p.fast_sigma * fast   # (K, H)
+    ang_j = 2 * jnp.pi * plant_lib.BURSTY_JITTER_FREQ_HZ * tf   # (K,)
+    jit_t = plant_lib.BURSTY_EDGE_JITTER_S * (
+        jnp.sin(ang_j)[:, None] * jnp.cos(p.jitter_ph)[None]
+        + jnp.cos(ang_j)[:, None] * jnp.sin(p.jitter_ph)[None])
+    frac = jnp.mod((tf[:, None] + jit_t) / plant_lib.BURSTY_PERIOD_S
+                   + p.duty_phase, 1.0)
+    on = frac < plant_lib.BURSTY_DUTY
+    bursty = jnp.where(on, base, plant_lib.BURSTY_LOW + 0.01 * fast)
+    return jnp.clip(jnp.where(p.is_bursty, bursty, base), 0.0, 1.0)
+
+
+def host_loads_at(p: HostLoadParams, t) -> jax.Array:
+    """The (H,) demand row of second ``t``: random access into the
+    counter-based synthesis (computes ``t``'s block, takes one row)."""
+    b = jnp.asarray(t, jnp.int32) // LOAD_BLOCK_S
+    return host_loads_block(p, b)[jnp.asarray(t, jnp.int32) % LOAD_BLOCK_S]
+
+
+@partial(jax.jit, static_argnames=("n_hosts", "n_seconds"))
+def host_loads_trace(n_hosts: int, n_seconds: int, key) -> jax.Array:
+    """Materialised (T, H) trace: vmap of :func:`host_loads_block`."""
+    p = host_load_params(n_hosts, key)
+    nb = -(-n_seconds // LOAD_BLOCK_S)
+    blocks = jax.vmap(partial(host_loads_block, p))(
+        jnp.arange(nb, dtype=jnp.int32))
+    return blocks.reshape(nb * LOAD_BLOCK_S, -1)[:n_seconds]
+
+
+def _host_loads(cfg: TwinConfig, key) -> jax.Array:
+    """Per-host mean-utilisation demand profile at 1 Hz, (T, H)."""
+    return host_loads_trace(cfg.n_hosts, cfg.seconds, key)
 
 
 class TwinInputs(NamedTuple):

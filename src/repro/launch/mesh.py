@@ -12,6 +12,15 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def make_scenario_mesh(n_devices: int | None = None):
+    """1-D mesh over a "scenario" axis: the engine sweep's data-parallel
+    layout (each device scans its slice of the scenario batch).  Defaults
+    to every local device; CI simulates 8 with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``."""
+    n = len(jax.devices()) if n_devices is None else n_devices
+    return jax.make_mesh((n,), ("scenario",))
+
+
 def make_local_mesh():
     """Whatever this process has (1 CPU device in the container): used by
     smoke tests, examples and the trainer."""

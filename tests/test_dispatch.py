@@ -116,6 +116,48 @@ def test_run_warns_on_removed_inline_accounting_kwargs():
         d.run([], horizon_h=2, not_a_kwarg=1)
 
 
+def test_deprecated_kwargs_delegate_matches_inline_path():
+    """Each deprecated inline-accounting kwarg still warns, and the
+    delegated replay_schedule totals reproduce the pre-PR-3 inline
+    per-hour integration on a small scenario."""
+    import repro.core.pue as pue_lib
+
+    horizon = 24
+    d = _dispatcher(seed=9)
+    jobs = synthesize_m100_trace(20, float(horizon), 32, seed=9)
+    stats = {}
+    for kw in ("integrate_energy", "integrate_carbon", "inline_accounting"):
+        dd = _dispatcher(seed=9)
+        jj = synthesize_m100_trace(20, float(horizon), 32, seed=9)
+        with pytest.warns(DeprecationWarning, match=kw):
+            stats[kw] = dd.run(jj, horizon_h=horizon, **{kw: True})
+    ref = _dispatcher(seed=9).run(jobs, horizon_h=horizon)
+
+    # the pre-PR-3 inline path: per-hour Python accounting over the
+    # realised utilisation trace (what `run` integrated before the
+    # delegation), in float64
+    it = fac = co2 = co2_it = cfe = 0.0
+    for h, mu in enumerate(ref.util_trace):
+        load = min(max(mu, 0.05), 1.0)
+        p = float(pue_lib.pue(load, d.t_amb[h], pue_design=d.pue_design))
+        it_w = load * d.design_it_w
+        fac_w = it_w * p
+        it += it_w
+        fac += fac_w
+        co2 += fac_w * d.ci[h]
+        co2_it += it_w * d.ci[h]
+        if d.ci[h] <= d.green_ci:
+            cfe += fac_w
+    for s in list(stats.values()) + [ref]:
+        # same realised schedule -> same accounting, every deprecated kwarg
+        assert s.util_trace == ref.util_trace
+        assert s.it_energy_mwh == pytest.approx(it / 1e6, rel=1e-4)
+        assert s.facility_energy_mwh == pytest.approx(fac / 1e6, rel=1e-4)
+        assert s.co2_t == pytest.approx(co2 / 1e9, rel=1e-4)
+        assert s.co2_it_t == pytest.approx(co2_it / 1e9, rel=1e-4)
+        assert s.cfe_num == pytest.approx(cfe / 1e6, rel=1e-4)
+
+
 @given(st.integers(0, 10_000))
 @settings(max_examples=20, deadline=None)
 def test_beta_monotone_in_wait(seed):

@@ -71,6 +71,46 @@ def test_product_specs_cartesian():
     assert len(set(specs)) == 8
 
 
+def test_build_scenario_batch_dedupes_trace_synthesis(monkeypatch):
+    """Specs differing only in non-trace axes (mw x pue_design x product x
+    rho) synthesise their CI/T_amb traces ONCE per distinct
+    (country, seed, start_day, horizon) key -- and the cached batch is
+    identical to per-spec synthesis."""
+    import repro.grid.scenarios as sc
+    calls = {"ci": [], "t_amb": []}
+    orig_ci, orig_ta = sc.synthesize_ci, sc.synthesize_t_amb
+
+    def count_ci(country, h, seed, start_day):
+        calls["ci"].append((country, seed, start_day, h))
+        return orig_ci(country, h, seed, start_day)
+
+    def count_ta(country, h, seed, start_day):
+        calls["t_amb"].append((country, seed, start_day, h))
+        return orig_ta(country, h, seed, start_day)
+
+    monkeypatch.setattr(sc, "synthesize_ci", count_ci)
+    monkeypatch.setattr(sc, "synthesize_t_amb", count_ta)
+    specs = product_specs(countries=("DE", "SE"), seeds=(0, 1),
+                          mw_levels=(5.0, 10.0), pue_designs=(1.12, 1.3),
+                          horizon_h=12, products=("FFR",),
+                          reserve_rhos=(0.0, 0.2))
+    assert len(specs) == 32                      # 2 x 2 x 2 x 2 x 2
+    batch = sc.build_scenario_batch(specs)
+    # one synthesis per distinct trace key, not per spec
+    assert len(calls["ci"]) == len(calls["t_amb"]) == 4
+    assert len(set(calls["ci"])) == 4
+    # the deduped batch is exactly what uncached per-spec synthesis gives
+    for i, s in enumerate(specs):
+        np.testing.assert_array_equal(
+            np.asarray(batch.ci[i, :s.horizon_h]),
+            np.asarray(orig_ci(s.country, s.horizon_h, s.seed, s.start_day),
+                       np.float32), err_msg=f"ci spec {i}")
+        np.testing.assert_array_equal(
+            np.asarray(batch.t_amb[i, :s.horizon_h]),
+            np.asarray(orig_ta(s.country, s.horizon_h, s.seed, s.start_day),
+                       np.float32), err_msg=f"t_amb spec {i}")
+
+
 def test_batch_reserve_fields_roundtrip():
     """The E9 axes (product, committed band, event draw) ride the batch."""
     specs = product_specs(countries=("SE",), horizon_h=24,
