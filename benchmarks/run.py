@@ -26,7 +26,7 @@ def main(argv=None) -> int:
     from benchmarks import (cluster_24h, e1_calibration, e2_step_response,
                             e3_ar4, e4_closed_loop, e7_fr_latency,
                             e8_multicountry, e9_reserve, engine_bench,
-                            roofline)
+                            roofline, workload_bench)
     from benchmarks.common import emit
 
     suite = [
@@ -40,6 +40,7 @@ def main(argv=None) -> int:
          lambda: e8_multicountry.run_batched_bench(fast=args.fast)),
         ("e9", lambda: e9_reserve.run(fast=args.fast)),
         ("engine", lambda: engine_bench.run(fast=args.fast)),
+        ("workload", lambda: workload_bench.run(fast=args.fast)),
         ("engine_sharded",
          lambda: engine_bench.run_sharded(fast=args.fast)),
         ("fig4", lambda: cluster_24h.run(fast=args.fast)),

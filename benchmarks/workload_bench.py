@@ -1,0 +1,119 @@
+"""Workload-in-the-loop: throughput-priced vs throughput-blind Tier-3.
+
+The workload term closes the last open loop of the unified engine: the
+SAME power->throughput curve (``repro.workload.model``) the live trainer
+actuates and the engine tick accumulates is fed back into the hourly
+(mu, rho) grid search as ``w_tok * throughput_score``.  This entry runs
+the fast sweep twice -- ``workload_weight=0`` (blind) vs ``> 0``
+(priced) -- and reports:
+
+  * how many (scenario, hour) cells the workload term moved,
+  * the tokens-lost vs reserve-revenue trade-off of the re-pricing
+    (Mtok saved per scenario-day against the EUR of reserve revenue
+    given up),
+
+asserting the priced sweep actually changes at least one operating
+point and never gives tokens away (the monotone direction of the term).
+Both arms stay ONE ``jit(vmap(scan))`` -- the workload axis rides the
+same compiled rollout.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+import repro.core.engine as engine_lib
+from benchmarks.common import emit, save_json
+from benchmarks.e9_reserve import build_e9_batch, engine_config
+
+# weight of the throughput-retention score in J(mu, rho).  Comparable to
+# W_FFR/W_CFE so tokens genuinely compete with reserve quality on the
+# fast sweep's 6 h slices (smaller weights only move long horizons).
+W_TOK = 0.35
+
+
+def run(fast: bool = True) -> dict:
+    specs, batch = build_e9_batch(fast)
+    mixes = sorted({s.workload_mix for s in specs})
+    cfg = engine_config(fast, rho_mode="tier3")
+    arms = {
+        "blind": cfg,
+        "priced": dataclasses.replace(cfg, workload_weight=W_TOK),
+    }
+    out = {tag: jax.tree.map(np.asarray, engine_lib.engine_rollout(c, batch))
+           for tag, c in arms.items()}
+
+    emit("workload.n_scenarios", batch.n,
+         "throughput-priced vs -blind Tier-3, one fused scan per arm")
+    emit("workload.w_tok", W_TOK, "weight of throughput_score in J(mu,rho)")
+
+    # -- how far the workload term moved the operating points --------------
+    m = np.asarray(batch.mask) > 0
+    moved = ((out["blind"]["mu_h"] != out["priced"]["mu_h"])
+             | (out["blind"]["rho_h"] != out["priced"]["rho_h"])) & m
+    emit("workload.cells_moved", int(moved.sum()),
+         "(scenario, hour) cells with a different chosen (mu, rho)")
+    emit("workload.cells_moved_frac", round(float(moved.sum() / m.sum()), 3),
+         "fraction of valid hours re-priced by the token term")
+    assert moved.any(), (
+        "workload term moved no operating point -- the priced sweep is "
+        "indistinguishable from the blind one (acceptance gate)")
+
+    # tokens push mu UP (throughput_score is monotone in power).  rho has
+    # no guaranteed direction: the higher mu relaxes the feasibility
+    # floor (mu - rho >= MIN_RESIDUAL_LOAD), which can let the search
+    # commit a LARGER band than the blind arm could afford.
+    d_mu = float(np.mean((out["priced"]["mu_h"] - out["blind"]["mu_h"])[m]))
+    d_rho = float(np.mean((out["priced"]["rho_h"]
+                           - out["blind"]["rho_h"])[m]))
+    emit("workload.delta_mu_mean", round(d_mu, 4),
+         "priced - blind mean operating fraction (>= 0)")
+    emit("workload.delta_rho_mean", round(d_rho, 4),
+         "priced - blind mean committed band (either sign)")
+    assert d_mu >= -1e-6
+
+    # -- the trade-off: tokens bought back vs reserve revenue given up -----
+    rows = []
+    for i, s in enumerate(specs):
+        rows.append(dict(
+            country=s.country, rho=s.reserve_rho, mix=s.workload_mix,
+            tokens_blind_mtok=float(out["blind"]["tokens_mtok"][i]),
+            tokens_priced_mtok=float(out["priced"]["tokens_mtok"][i]),
+            tokens_lost_blind_mtok=float(
+                out["blind"]["tokens_lost_mtok"][i]),
+            tokens_lost_priced_mtok=float(
+                out["priced"]["tokens_lost_mtok"][i]),
+            net_eur_blind=float(out["blind"]["net_eur"][i]),
+            net_eur_priced=float(out["priced"]["net_eur"][i]),
+            n_events=int(out["priced"]["n_events"][i]),
+        ))
+    tok_saved = float(np.mean([r["tokens_lost_blind_mtok"]
+                               - r["tokens_lost_priced_mtok"]
+                               for r in rows]))
+    eur_forgone = float(np.mean([r["net_eur_blind"] - r["net_eur_priced"]
+                                 for r in rows]))
+    emit("workload.tokens_saved_mtok", round(tok_saved, 3),
+         "training tokens bought back per scenario by the re-pricing")
+    emit("workload.reserve_eur_forgone", round(eur_forgone, 1),
+         "reserve revenue given up for those tokens (the trade-off)")
+    for mix in mixes:
+        sel = [r for r in rows if r["mix"] == mix]
+        emit(f"workload.{mix}.tokens_lost_mtok",
+             round(float(np.mean([r["tokens_lost_priced_mtok"]
+                                  for r in sel])), 3),
+             "lost vs flat-out reference, priced arm, mean/scenario")
+
+    save_json("workload_bench.json", dict(
+        n_scenarios=batch.n, w_tok=W_TOK, cells_moved=int(moved.sum()),
+        delta_mu_mean=d_mu, delta_rho_mean=d_rho,
+        tokens_saved_mtok=tok_saved, reserve_eur_forgone=eur_forgone,
+        rows=rows))
+    return dict(rows=rows, cells_moved=int(moved.sum()),
+                tokens_saved_mtok=tok_saved,
+                reserve_eur_forgone=eur_forgone)
+
+
+if __name__ == "__main__":
+    run(fast=False)

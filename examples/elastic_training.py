@@ -1,11 +1,22 @@
-"""Elastic scaling + fault tolerance demo.
+"""Elastic scaling + fault tolerance demo, on the workload actuator.
 
     PYTHONPATH=src python examples/elastic_training.py
 
-Trains with checkpointing, simulates a host failure (straggler eviction),
-resizes the mesh (the elastic DP-width change Tier-3's replica scaling
-drives), and restores from the sharded checkpoint onto the new mesh --
-the restore path is width-independent by construction.
+Walks the trainer's full grid-actuation surface -- the SAME shared
+workload model (`repro.workload`) the offline engine accumulates and
+Tier-3 prices:
+
+  1. power-cap / duty-cycle: a PowerPlan maps through `PowerActuator`
+     to per-step run/derate decisions (the shed quantum is configurable
+     and floor-quantised, so a small positive duty never sheds
+     everything),
+  2. checkpoint / resume under a grid event: a new shed plan saves a
+     grid-event checkpoint BEFORE the shed window, and the first step
+     after it records a `resumed` event; the dead time this costs is
+     what `repro.workload.ckpt_cost` prices into Tier-3's J(mu, rho),
+  3. elastic resize: straggler eviction shrinks the data-parallel
+     width and the sharded checkpoint restores onto the new mesh --
+     the restore path is width-independent by construction.
 """
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -16,8 +27,26 @@ import numpy as np
 
 from repro.configs import get_arch
 from repro.configs.base import ShapeConfig
+from repro.core.controller import PowerPlan
 from repro.launch.mesh import make_local_mesh
 from repro.train.trainer import Trainer, TrainerConfig
+from repro.workload import grid_event_cost_s
+
+
+class ScriptedGrid:
+    """Minimal GridPilot stand-in: fires one scripted FFR shed plan."""
+
+    n_hosts, chips_per_host, chip_tdp = 1, 8, 250.0
+
+    def __init__(self, fire_at_poll: int, plan: PowerPlan):
+        self._polls, self._fire_at, self._plan = 0, fire_at_poll, plan
+
+    def poll_ffr(self):
+        self._polls += 1
+        return self._plan if self._polls == self._fire_at else None
+
+    def observe_host_power(self, buf):
+        self.last_host_power = float(np.asarray(buf)[0])
 
 
 def main():
@@ -25,16 +54,35 @@ def main():
     shape = ShapeConfig("elastic", seq_len=64, global_batch=4, kind="train")
     ckpt_dir = tempfile.mkdtemp(prefix="gridpilot_ckpt_")
 
+    # --- phase 1: train through a scripted grid event ---------------------
+    # duty 0.25 at a 4-step quantum: the actuator runs 1-in-4 during the
+    # shed (the old hard-coded k=10 + round() would have shed everything
+    # at small duties)
+    shed = PowerPlan(mu=0.6, rho=0.2, duty_cycle=0.25, replica_scale=1.0,
+                     cap_tokens_frac=1.0, ffr_shed=True)
+    gp = ScriptedGrid(fire_at_poll=4, plan=shed)
     mesh1 = make_local_mesh()
     t1 = Trainer(cfg, shape, mesh1,
-                 TrainerConfig(steps=10, ckpt_every=5, log_every=5,
-                               ckpt_dir=ckpt_dir))
+                 TrainerConfig(steps=12, ckpt_every=6, log_every=6,
+                               ckpt_dir=ckpt_dir, duty_quantum_steps=4))
+    t1.gp = gp
     out1 = t1.train()
-    print(f"phase 1: {len(out1['history'])} steps on mesh "
-          f"{dict(zip(mesh1.axis_names, mesh1.devices.shape))}, "
-          f"ckpt at {t1.ckpt.latest_step()}")
+    evs = [e["event"] for e in out1["events"]]
+    print(f"phase 1: {len(out1['history'])} ran / "
+          f"{out1['skipped']} shed on mesh "
+          f"{dict(zip(mesh1.axis_names, mesh1.devices.shape))}; "
+          f"events: {evs}")
+    assert "ffr_shed" in evs and "grid_ckpt" in evs and "resumed" in evs
+    # per-step history carries the shared model's throughput at the plan
+    thr = sorted({round(h["thr"], 3) for h in out1["history"]})
+    print(f"  step throughput under the plan (shared DVFS/duty curve): "
+          f"{thr}")
+    state_cost = grid_event_cost_s((out1["params"], out1["opt"]))
+    print(f"  ckpt cost model: one grid event charges "
+          f"{state_cost:.1f}s of save+restore dead time "
+          f"(what tier3.throughput_score prices per activation)")
 
-    # straggler detection fires -> evict host -> elastic resize
+    # --- phase 2: straggler eviction -> elastic resize + restore ----------
     t1.health.last_beat[0] -= 999.0
     stragglers = t1.health.stragglers(30.0)
     print(f"straggler watchdog: hosts {stragglers} silent -> evict + "
@@ -42,11 +90,11 @@ def main():
 
     mesh2 = make_local_mesh()  # (the surviving fleet's mesh)
     t2 = t1.resize(mesh2)
-    t2.tcfg = TrainerConfig(steps=18, ckpt_every=5, log_every=5,
+    t2.tcfg = TrainerConfig(steps=20, ckpt_every=6, log_every=6,
                             ckpt_dir=ckpt_dir)
     from repro.ckpt import CheckpointManager
     t2.ckpt = CheckpointManager(ckpt_dir)
-    out2 = t2.train()  # restores from step 10's checkpoint automatically
+    out2 = t2.train()  # restores from phase 1's checkpoint automatically
     restored = [e for e in t2.events if e.get("event") == "restored"]
     print(f"phase 2: restored={bool(restored)}, continued to step "
           f"{out2['history'][-1]['step']}")
@@ -55,7 +103,8 @@ def main():
     print(f"loss: {l1[0]:.3f} -> {l1[-1]:.3f} || resize || "
           f"{l2[0]:.3f} -> {l2[-1]:.3f}")
     assert l2[0] < l1[0] + 0.5, "restore lost training progress"
-    print("elastic restore preserved progress across the resize")
+    print("elastic restore preserved progress across the grid event "
+          "and the resize")
 
 
 if __name__ == "__main__":

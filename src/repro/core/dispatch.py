@@ -37,6 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 
 import repro.core.pue as pue_lib
+import repro.workload.model as workload_lib
 
 SIGMA_PCT = 66.0
 BETA_CUTOFF = 0.7
@@ -81,7 +82,8 @@ def schedule_from_threshold(signal, thr, lo, mask, mu_hi: float):
 
 
 def replay_schedule(mu, ci, t_amb, mask, *, pue_design,
-                    green_ci=None, design_w: float = 1.0) -> dict:
+                    green_ci=None, design_w: float = 1.0,
+                    clock_w=None) -> dict:
     """Integrate power/carbon for utilisation schedule(s) ``mu``.
 
     mu: (..., H) -- any stack of schedules sharing one (H,) ci/t_amb/mask
@@ -95,6 +97,11 @@ def replay_schedule(mu, ci, t_amb, mask, *, pue_design,
       cfe_mu    utilisation placed in green hours (ci <= green_ci)
       cfe_fac   metered draw placed in green hours (the dispatcher's CFE
                 numerator; same units as fac)
+      thr       (only when ``clock_w`` is given) full-rate-equivalent
+                workload hours: sum of the shared DVFS throughput curve
+                ``workload.throughput_frac(clock_w, load)`` over valid
+                hours -- the quasi-static half of the engine's token
+                settlement
 
     Padded hours (mask == 0) contribute nothing.  This is the data-plane
     half of Algorithm 1's per-hour accounting, extracted so the batched
@@ -107,15 +114,20 @@ def replay_schedule(mu, ci, t_amb, mask, *, pue_design,
     zeros = jnp.zeros(batch_shape, jnp.float32)
     green = jnp.asarray(-jnp.inf if green_ci is None else green_ci,
                         jnp.float32)
+    with_thr = clock_w is not None
+    if with_thr:
+        clock_w = jnp.asarray(clock_w, jnp.float32)
 
     def hour(carry, xs):
-        it, fac, co2_it, co2, cfe, cfe_f = carry
+        it, fac, co2_it, co2, cfe, cfe_f, thr = carry
         mu_h, ci_h, ta_h, m = xs           # mu_h: batch_shape; rest scalar
         load = jnp.clip(mu_h, 0.05, 1.0)
         p = pue_lib.pue(load, ta_h, pue_design=pue_design)
         it_w = load * design_w * m
         fac_w = load * p * design_w * m
         is_green = ci_h <= green
+        if with_thr:
+            thr = thr + workload_lib.throughput_frac(clock_w, load) * m
         return (
             it + it_w,
             fac + fac_w,
@@ -123,18 +135,22 @@ def replay_schedule(mu, ci, t_amb, mask, *, pue_design,
             co2 + fac_w * ci_h,
             cfe + jnp.where(is_green, mu_h, 0.0) * m,
             cfe_f + jnp.where(is_green, fac_w, 0.0),
+            thr,
         ), None
 
     # unroll: the body is a handful of elementwise ops, so the while-loop
     # step overhead dominates on CPU; unrolling trades a slightly larger
     # program for ~an order of magnitude fewer loop iterations.
-    (it, fac, co2_it, co2, cfe, cfe_f), _ = jax.lax.scan(
-        hour, (zeros, zeros, zeros, zeros, zeros, zeros),
+    (it, fac, co2_it, co2, cfe, cfe_f, thr), _ = jax.lax.scan(
+        hour, (zeros, zeros, zeros, zeros, zeros, zeros, zeros),
         (jnp.moveaxis(mu, -1, 0), ci, t_amb, mask),
         unroll=24,
     )
-    return dict(it=it, fac=fac, co2_it=co2_it, co2=co2, cfe_mu=cfe,
-                cfe_fac=cfe_f)
+    out = dict(it=it, fac=fac, co2_it=co2_it, co2=co2, cfe_mu=cfe,
+               cfe_fac=cfe_f)
+    if with_thr:
+        out["thr"] = thr
+    return out
 
 
 @dataclass

@@ -67,6 +67,7 @@ import repro.core.tier3 as tier3_lib
 import repro.core.twin as twin_lib
 import repro.grid.frequency as frequency
 import repro.grid.markets as markets
+import repro.workload.model as workload_lib
 from repro.grid.scenarios import ScenarioBatch, frequency_seeds, \
     masked_quantile
 
@@ -96,6 +97,18 @@ class EngineConfig:
     events_per_day: float = tier3_lib.EVENTS_PER_DAY_DEFAULT
     e_max: int = 24
     max_freq_events: int = 64
+    # workload-in-the-loop (repro.workload).  workload_weight is w_tok in
+    # the Tier-3 objective: 0 keeps the selection graph bit-identical to
+    # the throughput-blind engine (the parity guarantee); > 0 prices lost
+    # training tokens against reserve revenue.  ckpt_cost_s is the
+    # checkpoint+restore dead time one activation charges, and
+    # step_transient_amp/step_period_s shape the step-synchronous power
+    # wave modulating the demand inside the tick (0 = off, no graph
+    # change).
+    workload_weight: float = 0.0
+    ckpt_cost_s: float = workload_lib.DEFAULT_GRID_CKPT_S
+    step_transient_amp: float = 0.0
+    step_period_s: float = workload_lib.STEP_PERIOD_S_DEFAULT
     # seconds-tier toggle: False runs the hourly tiers only (Tier-3 search
     # + schedule energy accounting), the E8 configuration
     with_seconds: bool = True
@@ -123,7 +136,8 @@ class EngineConfig:
         return twin_lib.TwinConfig(
             n_hosts=self.n_hosts, chips_per_host=self.chips_per_host,
             chip_tdp=self.chip_tdp, pue_aware=self.pue_aware,
-            seconds=seconds)
+            seconds=seconds, step_transient_amp=self.step_transient_amp,
+            step_period_s=self.step_period_s)
 
 
 class EngineAccum(NamedTuple):
@@ -139,6 +153,7 @@ class EngineAccum(NamedTuple):
     chip_p95: jax.Array     # sum of per-tick chip power p95 (W)
     shed_s: jax.Array       # seconds spent shedding for the reserve
     shed_it: jax.Array      # sum of armed rho_it over shed seconds
+    thr: jax.Array          # sum of workload throughput fraction g(L)
 
 
 class EngineState(NamedTuple):
@@ -163,6 +178,7 @@ class EngineParams(NamedTuple):
     rho_it_h: jax.Array     # (Hm,) armed IT-side band (quasi-static table)
     min_dur_i: jax.Array    # scalar int32 product sustain window
     pue_design: jax.Array   # scalar
+    clock_w: jax.Array      # scalar workload-mix clock weight (CLOCK_W)
 
 
 class EngineSecond(NamedTuple):
@@ -197,6 +213,7 @@ class HourParams(NamedTuple):
     rho_it: jax.Array
     min_dur_i: jax.Array
     pue_design: jax.Array
+    clock_w: jax.Array
 
 
 def _hour_params(params: EngineParams, hour) -> HourParams:
@@ -205,7 +222,8 @@ def _hour_params(params: EngineParams, hour) -> HourParams:
     return HourParams(
         mu=params.mu_h[hour], rho=params.rho_h[hour],
         t_amb=params.t_amb_h[hour], rho_it=params.rho_it_h[hour],
-        min_dur_i=params.min_dur_i, pue_design=params.pue_design)
+        min_dur_i=params.min_dur_i, pue_design=params.pue_design,
+        clock_w=params.clock_w)
 
 
 def _engine_tick(cfg: EngineConfig, hp: HourParams, state: EngineState, xs):
@@ -215,6 +233,12 @@ def _engine_tick(cfg: EngineConfig, hp: HourParams, state: EngineState, xs):
         (state.in_event, state.hold), below, in_hor, hp.min_dur_i)
 
     load_h = base_load * hp.mu / 0.9
+    if cfg.step_transient_amp:
+        # step-synchronous power wave (EasyRider): gated on the STATIC
+        # amplitude so the default-0 graph is unchanged (the parity path)
+        load_h = jnp.clip(
+            load_h * workload_lib.step_transient(
+                t, cfg.step_period_s, cfg.step_transient_amp), 0.0, 1.0)
     carry = (state.rls, state.chip_power, state.caps, state.key)
     (rls, chip_power, caps, key), m = twin_lib.twin_tick(
         cfg.n_hosts, cfg.chips_per_host, cfg.chip_tdp, hp.pue_design,
@@ -236,6 +260,10 @@ def _engine_tick(cfg: EngineConfig, hp: HourParams, state: EngineState, xs):
         chip_p95=a.chip_p95 + g * m.chip_power_p95,
         shed_s=a.shed_s + shed.astype(jnp.float32),
         shed_it=a.shed_it + hp.rho_it * shed,
+        # realised workload throughput at this second's cluster power
+        # fraction -- the per-chip budget the fleet actually ran at --
+        # through the shared DVFS/duty-cycle curve
+        thr=a.thr + g * workload_lib.throughput_frac(hp.clock_w, L),
     )
     sec = EngineSecond(trig=trig, shed=shed, load=state.last_load)
     new = EngineState(rls=rls, chip_power=chip_power, caps=caps, key=key,
@@ -272,23 +300,29 @@ def engine_step(cfg: EngineConfig, params: EngineParams, state: EngineState,
 
 
 def _hourly_one(cfg: EngineConfig, ci, t_amb, mask, mw, pue_design,
-                product_idx, rho_batch) -> dict:
+                product_idx, rho_batch, mix_idx) -> dict:
     """Tier-3 grid search + hourly schedule energy/carbon accounting."""
     green = tier3_lib.greenness_from_ci(ci, mask)
     w_rev = cfg.w_rev if cfg.price_aware else 0.0
+    clock_w = jnp.asarray(workload_lib.CLOCK_W)[mix_idx]
     op = tier3_lib.select_operating_points(
         green, t_amb, pue_aware=cfg.pue_aware, pue_design=pue_design,
-        weights=(tier3_lib.W_FFR, tier3_lib.W_CFE, w_rev),
+        weights=(tier3_lib.W_FFR, tier3_lib.W_CFE, w_rev,
+                 cfg.workload_weight),
         product_idx=product_idx, events_per_day=cfg.events_per_day,
-        rho_fixed=rho_batch, use_revenue=cfg.price_aware,
-        fix_rho=(cfg.rho_mode == "batch"))
+        rho_fixed=rho_batch, clock_w=clock_w, ckpt_cost_s=cfg.ckpt_cost_s,
+        use_revenue=cfg.price_aware,
+        fix_rho=(cfg.rho_mode == "batch"),
+        use_workload=(cfg.workload_weight != 0.0))
     mu_h = jnp.where(mask > 0, op.mu, 0.0)
     rho_h = jnp.where(mask > 0, op.rho, 0.0)
     green_ci = masked_quantile(ci, mask, 50.0)
     energy = dispatch.replay_schedule(mu_h, ci, t_amb, mask,
                                       pue_design=pue_design,
-                                      green_ci=green_ci, design_w=mw)
+                                      green_ci=green_ci, design_w=mw,
+                                      clock_w=clock_w)
     hv = jnp.maximum(jnp.sum(mask), 1.0)
+    tok_rate = jnp.asarray(workload_lib.TOKENS_PER_MW_S)[mix_idx]
     return dict(
         mu_h=mu_h, rho_h=rho_h,
         mean_mu=jnp.sum(mu_h * mask) / hv,
@@ -299,15 +333,19 @@ def _hourly_one(cfg: EngineConfig, ci, t_amb, mask, mw, pue_design,
         sched_co2_it_t=energy["co2_it"] / 1000.0,
         sched_cfe_fac_mwh=energy["cfe_fac"],
         cfe_mu=energy["cfe_mu"],
+        # quasi-static workload accounting: full-rate-equivalent schedule
+        # hours -> millions of tokens at the mix's site rate
+        sched_tokens_mtok=energy["thr"] * 3600.0 * mw * tok_rate / 1e6,
     )
 
 
 def _rollout_one(cfg: EngineConfig, reduce: str, ci, t_amb, mask, hours,
-                 mw, pue_design, product_idx, rho_batch, freq, base_loads,
-                 load_key, key) -> dict:
+                 mw, pue_design, product_idx, rho_batch, mix_idx, freq,
+                 base_loads, load_key, key) -> dict:
     out = _hourly_one(cfg, ci, t_amb, mask, mw, pue_design, product_idx,
-                      rho_batch)
+                      rho_batch, mix_idx)
     mu_h, rho_h = out["mu_h"], out["rho_h"]
+    clock_w = jnp.asarray(workload_lib.CLOCK_W)[mix_idx]
     h_max = ci.shape[-1]
     T = freq.shape[-1]
     valid_s = jnp.asarray(hours, jnp.int32) * 3600
@@ -323,7 +361,7 @@ def _rollout_one(cfg: EngineConfig, reduce: str, ci, t_amb, mask, hours,
     params = EngineParams(mu_h=mu_h, rho_h=rho_h, t_amb_h=t_amb,
                           rho_it_h=vh["rho_it"],
                           min_dur_i=min_dur_f.astype(jnp.int32),
-                          pue_design=pue_design)
+                          pue_design=pue_design, clock_w=clock_w)
     # --- the fused scan, walked hierarchically: an outer scan over hours
     # and an inner scan over the hour's LOAD_BLOCK_S (= 3600) seconds.
     # The outer level gathers the hourly tables once per hour and -- when
@@ -388,6 +426,21 @@ def _rollout_one(cfg: EngineConfig, reduce: str, ci, t_amb, mask, hours,
     acc = state.acc
     n = jnp.maximum(acc.n_s, 1.0)
     nw = jnp.maximum(acc.n_warm, 1.0)
+
+    # --- workload settlement: lost training tokens alongside energy and
+    #     reserve revenue.  Earned tokens integrate the realised per-second
+    #     throughput; the reference runs every valid second at the top of
+    #     the mu grid; each event additionally charges the checkpoint+
+    #     restore dead time at the reference rate.
+    tok_rate = jnp.asarray(workload_lib.TOKENS_PER_MW_S)[mix_idx]
+    n_events_f = jnp.sum(valid).astype(jnp.float32)
+    thr_ref = workload_lib.throughput_frac(
+        clock_w, float(tier3_lib.MU_GRID[-1]))
+    tok_unit = mw * tok_rate / 1e6                     # Mtok per thr-second
+    tokens_mtok = acc.thr * tok_unit
+    tokens_ckpt_mtok = n_events_f * cfg.ckpt_cost_s * thr_ref * tok_unit
+    tokens_ref_mtok = acc.n_s * thr_ref * tok_unit
+
     out.update(
         # twin summary (streaming aggregates; site-MW energies)
         ar4_mae_norm=acc.err / nw,
@@ -408,6 +461,11 @@ def _rollout_one(cfg: EngineConfig, reduce: str, ci, t_amb, mask, hours,
         penalty_eur=penalty_eur,
         net_eur=capacity_eur - penalty_eur,
         n_compliant=jnp.sum(valid & events.compliant).astype(jnp.int32),
+        # workload settlement (millions of tokens)
+        thr_mean=acc.thr / n,
+        tokens_mtok=tokens_mtok,
+        tokens_ckpt_mtok=tokens_ckpt_mtok,
+        tokens_lost_mtok=tokens_ref_mtok - tokens_mtok + tokens_ckpt_mtok,
     )
     if reduce == "full":
         out["metrics"] = metrics
@@ -423,8 +481,8 @@ def _engine_seconds_vmapped(cfg: EngineConfig, reduce: str,
     fn = partial(_rollout_one, cfg, reduce)
     return jax.vmap(fn)(batch.ci, batch.t_amb, batch.mask, batch.hours,
                         batch.mw, batch.pue_design, batch.product_idx,
-                        batch.reserve_rho, freq, base_loads, load_keys,
-                        scan_keys)
+                        batch.reserve_rho, batch.mix_idx, freq, base_loads,
+                        load_keys, scan_keys)
 
 
 @partial(jax.jit, static_argnames=("cfg", "reduce"))
@@ -438,7 +496,7 @@ def _engine_hourly_vmapped(cfg: EngineConfig, batch: ScenarioBatch) -> dict:
     fn = partial(_hourly_one, cfg)
     return jax.vmap(fn)(batch.ci, batch.t_amb, batch.mask, batch.mw,
                         batch.pue_design, batch.product_idx,
-                        batch.reserve_rho)
+                        batch.reserve_rho, batch.mix_idx)
 
 
 @partial(jax.jit, static_argnames=("cfg",))
@@ -654,4 +712,13 @@ def summarize_rollout(cfg: EngineConfig, batch: ScenarioBatch,
     out["it_mwh"] = (L * g).sum(-1) * mw / 3600.0
     out["fac_mwh"] = (F * g).sum(-1) * mw / 3600.0
     out["active_s"] = (np.asarray(full["shed"]) & g).sum(-1)
+    # workload throughput: the same shared curve, reduced from the stacks
+    clock_w = np.asarray(workload_lib.CLOCK_W)[np.asarray(batch.mix_idx)]
+    thr = np.asarray(workload_lib.throughput_frac(clock_w[:, None],
+                                                  L.astype(np.float32)))
+    thr_sum = (thr * g).sum(-1)
+    out["thr_mean"] = thr_sum / n
+    tok_rate = np.asarray(workload_lib.TOKENS_PER_MW_S)[
+        np.asarray(batch.mix_idx)]
+    out["tokens_mtok"] = thr_sum * mw * tok_rate / 1e6
     return out

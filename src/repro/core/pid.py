@@ -108,3 +108,21 @@ def pid_rollout_batch(state: PIDState, plant: plant_lib.PlantState, targets,
     return jax.vmap(
         lambda s, p, t, l: _pid_rollout_impl(s, p, t, l, tau_ms)
     )(state, plant, targets, loads)
+
+
+@partial(jax.jit, static_argnames=("tau_ms",))
+def pid_rollout_grid(state: PIDState, plant: plant_lib.PlantState, targets,
+                     loads, tau_ms: float = 6.0):
+    """`pid_rollout` over the full (scenario x host) product.
+
+    Every argument carries (S, H) leading axes -- S scenarios (operating
+    points) x H hosts (demand archetypes) -- and all S*H closed-loop
+    rollouts run as ONE compiled vmap(vmap(scan)).  Power trace:
+    (S, H, T, n).  This is the Tier-1 quasi-static check's sweep surface:
+    the twin's 1 Hz tick assumes every (target, load) cell settles to
+    min(demand, cap) well inside a second, and this rollout verifies it
+    across the whole product instead of a hand-picked diagonal.
+    """
+    return jax.vmap(jax.vmap(
+        lambda s, p, t, l: _pid_rollout_impl(s, p, t, l, tau_ms)
+    ))(state, plant, targets, loads)

@@ -5,6 +5,7 @@ FR reserve band rho in {0.0..0.3}) maximising
 
     J(mu, rho) = 0.55 * Q_FFR(mu, rho) + 0.45 * CFE(mu, rho)
                  [+ w_rev * R(mu, rho)   when price-aware]
+                 [+ w_tok * G(mu, rho)   when workload-aware]
 
 Q_FFR is the relative FR-provision quality *at the facility meter* -- this
 is what motivates the PUE correction: a CI-only controller evaluates the
@@ -38,6 +39,7 @@ import numpy as np
 import repro.core.plant as plant_lib
 import repro.core.pue as pue_lib
 import repro.grid.markets as markets
+import repro.workload.model as workload_lib
 
 MU_GRID = np.round(np.arange(0.4, 0.91, 0.1), 2)       # {0.4 .. 0.9}
 RHO_GRID = np.round(np.arange(0.0, 0.31, 0.1), 2)      # {0.0 .. 0.3}
@@ -182,6 +184,46 @@ def revenue_score(mu, rho, t_amb, product_idx, *, pue_aware: bool,
     return jnp.clip(net, -1.0, 1.0)
 
 
+def throughput_score(mu, rho, clock_w, product_idx, *,
+                     events_per_day=EVENTS_PER_DAY_DEFAULT,
+                     ckpt_cost_s=0.0) -> jax.Array:
+    """Expected training-throughput retention of (mu, rho), in [0, 1].
+
+    Tokens earned per hour relative to running flat-out at the top of
+    the mu grid, through the SAME DVFS/duty-cycle curve
+    (:func:`repro.workload.model.throughput_frac`) the engine tick
+    accumulates and the live trainer actuates.  Three effects:
+
+      * running at mu derates throughput to g(mu) (the DVFS curve),
+      * each expected activation (Poisson ``events_per_day``) sheds to
+        the residual ``mu - rho`` for the product's sustain window,
+      * each activation also charges ``ckpt_cost_s`` of checkpoint+
+        restore dead time (``repro.workload.ckpt_cost``) at zero
+        throughput -- holding a band is not free even if the shed
+        itself were.
+
+    This is the workload half of J(mu, rho): weighted in, it pushes the
+    selector toward higher mu and smaller committed bands exactly when
+    the tokens forfeited outweigh the reserve revenue.
+    """
+    mu = jnp.asarray(mu, jnp.float32)
+    rho = jnp.asarray(rho, jnp.float32)
+    g_run = workload_lib.throughput_frac(clock_w, mu)
+    resid = jnp.maximum(mu - rho, MIN_RESIDUAL_LOAD)
+    g_shed = workload_lib.throughput_frac(clock_w, resid)
+    ev_per_h = jnp.asarray(events_per_day, jnp.float32) / 24.0
+    dur_s = jnp.asarray(markets.MIN_DURATION_S)[product_idx]
+    has_band = (rho > 0.0).astype(jnp.float32)
+    shed_frac = jnp.clip(ev_per_h * dur_s / 3600.0, 0.0, 1.0) * has_band
+    dead_frac = jnp.clip(
+        ev_per_h * jnp.asarray(ckpt_cost_s, jnp.float32) / 3600.0,
+        0.0, 1.0) * has_band
+    dead_frac = jnp.minimum(dead_frac, 1.0 - shed_frac)
+    tokens = (1.0 - shed_frac - dead_frac) * g_run + shed_frac * g_shed
+    g_max = workload_lib.throughput_frac(clock_w, float(MU_GRID[-1]))
+    return tokens / jnp.maximum(g_max, 1e-6)
+
+
 # ---------------------------------------------------------------------------
 # The grid search, compiled once at module level.
 # ---------------------------------------------------------------------------
@@ -193,11 +235,13 @@ SELECT_TRACE_COUNT = {"n": 0}
 
 
 def _select_impl(greenness, t_amb, weights, pue_design, product_idx,
-                 events_per_day, rho_fixed, *, pue_aware: bool,
-                 use_revenue: bool, fix_rho: bool):
+                 events_per_day, rho_fixed, clock_w, ckpt_cost_s, *,
+                 pue_aware: bool, use_revenue: bool, fix_rho: bool,
+                 use_workload: bool):
     """Vectorised (B,)-hour grid search.  Traced once per (shape, static)
-    combination; all scalar knobs (weights, pue_design, product, rho) are
-    traced operands so selector instances share the compile cache."""
+    combination; all scalar knobs (weights, pue_design, product, rho,
+    clock_w, ckpt cost) are traced operands so selector instances share
+    the compile cache."""
     SELECT_TRACE_COUNT["n"] += 1
     mus = jnp.asarray(MU_GRID, jnp.float32)
     rhos = (jnp.reshape(jnp.asarray(rho_fixed, jnp.float32), (1,))
@@ -212,13 +256,34 @@ def _select_impl(greenness, t_amb, weights, pue_design, product_idx,
         J = J + weights[2] * revenue_score(
             MU[None], RHO[None], ta, product_idx, pue_aware=pue_aware,
             pue_design=pue_design, events_per_day=events_per_day)
+    if use_workload:
+        J = J + weights[3] * throughput_score(
+            MU[None], RHO[None], clock_w, product_idx,
+            events_per_day=events_per_day, ckpt_cost_s=ckpt_cost_s)
     flat = J.reshape(J.shape[0], -1)
     idx = jnp.argmax(flat, axis=-1)
     return MU.reshape(-1)[idx], RHO.reshape(-1)[idx]
 
 
 _select_jit = jax.jit(
-    _select_impl, static_argnames=("pue_aware", "use_revenue", "fix_rho"))
+    _select_impl,
+    static_argnames=("pue_aware", "use_revenue", "fix_rho", "use_workload"))
+
+
+def _pad_weights(weights) -> jax.Array:
+    """(w_ffr, w_cfe[, w_rev[, w_tok]]) -> a length-4 weight vector.
+
+    Callers predating the workload term pass 3 weights; they get w_tok=0,
+    which (with ``use_workload=False``) leaves the traced graph and the
+    selection bit-identical to the pre-workload selector.
+    """
+    w = jnp.asarray(weights, jnp.float32).reshape(-1)
+    if w.shape[0] > 4:
+        raise ValueError(f"expected at most 4 selection weights, "
+                         f"got {w.shape[0]}")
+    if w.shape[0] < 4:
+        w = jnp.concatenate([w, jnp.zeros((4 - w.shape[0],), jnp.float32)])
+    return w
 
 
 def select_operating_points(greenness, t_amb, *, pue_aware: bool,
@@ -227,25 +292,37 @@ def select_operating_points(greenness, t_amb, *, pue_aware: bool,
                             product_idx=0,
                             events_per_day=EVENTS_PER_DAY_DEFAULT,
                             rho_fixed=0.0,
+                            clock_w=None,
+                            ckpt_cost_s=workload_lib.DEFAULT_GRID_CKPT_S,
                             use_revenue: bool = False,
-                            fix_rho: bool = False) -> OperatingPoint:
+                            fix_rho: bool = False,
+                            use_workload: bool = False) -> OperatingPoint:
     """Functional hourly grid search: (B,) greenness/t_amb -> (B,) (mu, rho).
 
     ``fix_rho=True`` restricts the search to the (traced) committed band
     ``rho_fixed`` -- the unified engine's ``rho_mode="batch"`` path, where
-    the band was sold ahead of time and only mu is free.  Pure jnp and
-    jit-compiled once at module level; safe to call inside an outer jit.
+    the band was sold ahead of time and only mu is free.
+    ``use_workload=True`` adds ``weights[3] * throughput_score`` with the
+    (traced) mix clock weight ``clock_w`` and per-event checkpoint cost;
+    False keeps the traced graph identical to the pre-workload selector.
+    Pure jnp and jit-compiled once at module level; safe to call inside
+    an outer jit.
     """
     g = jnp.asarray(greenness, jnp.float32).reshape(-1)
     ta = jnp.broadcast_to(jnp.asarray(t_amb, jnp.float32).reshape(-1),
                           g.shape)
+    if clock_w is None:
+        clock_w = workload_lib.clock_weight("train")
     mu, rho = _select_jit(
-        g, ta, jnp.asarray(weights, jnp.float32),
+        g, ta, _pad_weights(weights),
         jnp.asarray(pue_design, jnp.float32),
         jnp.asarray(product_idx, jnp.int32),
         jnp.asarray(events_per_day, jnp.float32),
         jnp.asarray(rho_fixed, jnp.float32),
-        pue_aware=pue_aware, use_revenue=use_revenue, fix_rho=fix_rho)
+        jnp.asarray(clock_w, jnp.float32),
+        jnp.asarray(ckpt_cost_s, jnp.float32),
+        pue_aware=pue_aware, use_revenue=use_revenue, fix_rho=fix_rho,
+        use_workload=use_workload)
     return OperatingPoint(mu=mu, rho=rho)
 
 
@@ -277,6 +354,11 @@ class Tier3Selector:
     w_rev: float = 0.0
     product: str = "FFR"
     events_per_day: float = EVENTS_PER_DAY_DEFAULT
+    # workload term: weight of the throughput-retention score, the fleet's
+    # workload mix, and the checkpoint dead time one activation charges
+    w_tok: float = 0.0
+    workload_mix: str = "train"
+    ckpt_cost_s: float = workload_lib.DEFAULT_GRID_CKPT_S
 
     def objective(self, mu, rho, greenness, t_amb) -> jax.Array:
         q = q_ffr(mu, rho, t_amb, pue_aware=self.pue_aware,
@@ -288,6 +370,12 @@ class Tier3Selector:
                 mu, rho, t_amb, markets.PRODUCT_ORDER.index(self.product),
                 pue_aware=self.pue_aware, pue_design=self.pue_design,
                 events_per_day=self.events_per_day)
+        if self.w_tok:
+            J = J + self.w_tok * throughput_score(
+                mu, rho, workload_lib.clock_weight(self.workload_mix),
+                markets.PRODUCT_ORDER.index(self.product),
+                events_per_day=self.events_per_day,
+                ckpt_cost_s=self.ckpt_cost_s)
         return J
 
     def select_hour(self, greenness, t_amb) -> OperatingPoint:
@@ -295,10 +383,13 @@ class Tier3Selector:
         op = select_operating_points(
             greenness, t_amb, pue_aware=self.pue_aware,
             pue_design=self.pue_design,
-            weights=(self.w_ffr, self.w_cfe, self.w_rev),
+            weights=(self.w_ffr, self.w_cfe, self.w_rev, self.w_tok),
             product_idx=markets.PRODUCT_ORDER.index(self.product),
             events_per_day=self.events_per_day,
-            use_revenue=bool(self.w_rev))
+            clock_w=workload_lib.clock_weight(self.workload_mix),
+            ckpt_cost_s=self.ckpt_cost_s,
+            use_revenue=bool(self.w_rev),
+            use_workload=bool(self.w_tok))
         return OperatingPoint(mu=jnp.squeeze(op.mu), rho=jnp.squeeze(op.rho))
 
     def select_day(self, ci_24h, t_amb_24h) -> OperatingPoint:

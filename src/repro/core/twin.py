@@ -37,6 +37,7 @@ import repro.core.pue as pue_lib
 import repro.core.tier3 as tier3_lib
 import repro.grid.markets as markets
 import repro.grid.signals as signals
+import repro.workload.model as workload_lib
 
 
 class TwinMetrics(NamedTuple):
@@ -61,6 +62,10 @@ class TwinConfig:
     pue_aware: bool = True
     seconds: int = 86_400
     seed: int = 0
+    # step-synchronous training transient (repro.workload.step_transient):
+    # amplitude 0 (the default) leaves the demand traces exactly as before
+    step_transient_amp: float = 0.0
+    step_period_s: float = workload_lib.STEP_PERIOD_S_DEFAULT
 
     @property
     def n_chips(self) -> int:
@@ -359,6 +364,14 @@ def prepare_scenario(cfg: TwinConfig, grid: signals.GridSignals,
     key = jax.random.PRNGKey(seed)
     k_load, k_scan = jax.random.split(key)
     loads = _host_loads(cfg, k_load) * mu_sec[:, None] / 0.9
+    if cfg.step_transient_amp:
+        # synchronised-training power wave: every host breathes with the
+        # step clock (the worst case for the grid -- no averaging across
+        # desynchronised jobs), zero-mean so hourly energy is unchanged
+        wave = workload_lib.step_transient(
+            jnp.arange(cfg.seconds), cfg.step_period_s,
+            cfg.step_transient_amp)
+        loads = jnp.clip(loads * wave[:, None], 0.0, 1.0)
     inputs = TwinInputs(loads=loads, mu_sec=mu_sec, rho_sec=rho_sec,
                         ffr_sec=ffr_sec, t_amb_sec=t_amb_sec, key=k_scan)
     return TwinScenario(inputs=inputs, grid=grid, events=events,

@@ -26,6 +26,7 @@ import numpy as np
 import repro.core.pue as pue_lib
 from repro.grid.markets import PRODUCT_ORDER
 from repro.grid.signals import COUNTRY_ORDER, synthesize_ci, synthesize_t_amb
+from repro.workload.model import MIX_ORDER, mix_index
 
 DEFAULT_HORIZON_H = 28 * 24
 # value padded into t_amb beyond a scenario's horizon: the calibration
@@ -48,6 +49,10 @@ class ScenarioSpec:
     product: str = "FFR"
     reserve_rho: float = 0.0
     event_seed: int = 0
+    # what the site is running: indexes repro.workload's mix tables (clock
+    # sensitivity of the throughput curve + token rate) in settlement and
+    # the workload-aware Tier-3 search
+    workload_mix: str = "train"
 
 
 def product_specs(countries: Sequence[str] = tuple(COUNTRY_ORDER),
@@ -58,16 +63,18 @@ def product_specs(countries: Sequence[str] = tuple(COUNTRY_ORDER),
                   horizon_h: int = DEFAULT_HORIZON_H,
                   products: Sequence[str] = ("FFR",),
                   reserve_rhos: Sequence[float] = (0.0,),
-                  event_seeds: Sequence[int] = (0,)) -> list[ScenarioSpec]:
+                  event_seeds: Sequence[int] = (0,),
+                  workload_mixes: Sequence[str] = ("train",)
+                  ) -> list[ScenarioSpec]:
     """Cartesian (country x season x seed x level x design x product x rho
-    x event draw) scenario grid."""
+    x event draw x workload mix) scenario grid."""
     return [
         ScenarioSpec(country=c, seed=s, start_day=d, mw=m, pue_design=pd,
                      horizon_h=horizon_h, product=p, reserve_rho=r,
-                     event_seed=es)
-        for c, d, s, m, pd, p, r, es in itertools.product(
+                     event_seed=es, workload_mix=wm)
+        for c, d, s, m, pd, p, r, es, wm in itertools.product(
             countries, start_days, seeds, mw_levels, pue_designs,
-            products, reserve_rhos, event_seeds)
+            products, reserve_rhos, event_seeds, workload_mixes)
     ]
 
 
@@ -88,6 +95,7 @@ class ScenarioBatch:
     product_idx: jax.Array   # (N,) int32 index into markets.PRODUCT_ORDER
     reserve_rho: jax.Array   # (N,) float32 committed FR band
     event_seed: jax.Array    # (N,) int32 frequency-event draw
+    mix_idx: jax.Array       # (N,) int32 index into workload.MIX_ORDER
 
     @property
     def n(self) -> int:
@@ -111,6 +119,7 @@ class ScenarioBatch:
             product=PRODUCT_ORDER[int(self.product_idx[i])],
             reserve_rho=float(self.reserve_rho[i]),
             event_seed=int(self.event_seed[i]),
+            workload_mix=MIX_ORDER[int(self.mix_idx[i])],
         )
 
     def select(self, i: int) -> dict:
@@ -127,7 +136,8 @@ def build_scenario_batch(specs: Sequence[ScenarioSpec]) -> ScenarioBatch:
     """Synthesize every spec's traces and stack them into one padded batch.
 
     Scenarios that differ only in (mw, pue_design, product, reserve_rho,
-    event_seed) share their (country, seed, start_day, horizon) CI /
+    event_seed, workload_mix) share their (country, seed, start_day,
+    horizon) CI /
     ambient traces, so synthesis runs once per distinct trace key -- on
     the usual Cartesian product grids this cuts the builder's host-side
     work by the size of the non-trace axes.
@@ -164,6 +174,8 @@ def build_scenario_batch(specs: Sequence[ScenarioSpec]) -> ScenarioBatch:
         reserve_rho=jnp.asarray(
             [s.reserve_rho for s in specs], jnp.float32),
         event_seed=jnp.asarray([s.event_seed for s in specs], jnp.int32),
+        mix_idx=jnp.asarray(
+            [mix_index(s.workload_mix) for s in specs], jnp.int32),
     )
 
 

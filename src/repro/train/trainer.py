@@ -2,13 +2,20 @@
 elastic scaling.
 
 Power integration (the paper's composition, Sect. 1.1): the trainer holds
-a `PowerPlan` from the GridPilot controller.  Actuation is load shaping:
+a `PowerPlan` from the GridPilot controller and actuates it through the
+shared workload model (``repro.workload``) -- the SAME power-cap ->
+throughput curve the offline engine accumulates and Tier-3 prices:
 
-  * duty cycle  -- the reserve band rho is held as instantly-sheddable
-    steps: during an FFR activation the trainer *skips* the sheddable
-    fraction of steps (a no-op step is an exact, checkpoint-consistent
-    shed boundary -- a trigger can never corrupt a step),
-  * token-budget thinning -- optional microbatch drop under a cap,
+  * power cap / duty cycle -- a :class:`repro.workload.PowerActuator`
+    maps the plan to per-step :class:`~repro.workload.StepDecision`s:
+    during an FFR activation the trainer *skips* the sheddable fraction
+    of steps (a no-op step is an exact, checkpoint-consistent shed
+    boundary -- a trigger can never corrupt a step), with the shed
+    quantum configurable (``duty_quantum_steps``) and floor-quantised so
+    a small positive duty never sheds everything,
+  * checkpoint / resume -- a shed boundary saves a grid-event checkpoint
+    first (the dead time ``tier3.throughput_score`` charges per event),
+    and the first step after a shed window records a ``resumed`` event,
   * elastic replica scale -- Tier-3's mu maps to the data-parallel width;
     re-widening re-lowers the step and restores parameters from the
     in-memory (or on-disk) sharded state.
@@ -37,6 +44,7 @@ from repro.core.controller import GridPilot, PowerPlan
 from repro.core.plant import load_from_cost_analysis
 from repro.data.tokens import TokenPipeline
 from repro.train.step import StepBundle, build_step_bundle
+from repro.workload import RUN_FULL, PowerActuator, StepDecision
 
 
 @dataclass
@@ -50,6 +58,13 @@ class TrainerConfig:
     heartbeat_timeout_s: float = 30.0
     # power
     poll_power_every: int = 1
+    # workload actuation: the duty-cycle shed window (duty quantised to
+    # 1/duty_quantum_steps), the fleet's workload mix (indexes the shared
+    # throughput model), and whether a shed boundary saves a grid-event
+    # checkpoint before honouring the plan
+    duty_quantum_steps: int = 10
+    workload_mix: str = "train"
+    grid_event_ckpt: bool = True
 
 
 @dataclass
@@ -96,6 +111,14 @@ class Trainer:
         self.health = HostHealth(n_hosts=max(len(mesh.devices.flat) // 8, 1))
         self.skipped_steps = 0
         self.events: list[dict] = []
+        # workload actuation state (shared model; see module docstring)
+        self.actuator = PowerActuator(
+            mix=tcfg.workload_mix,
+            duty_quantum_steps=tcfg.duty_quantum_steps)
+        self.last_decision: StepDecision = RUN_FULL
+        self._pending_grid_ckpt = False
+        self._shed_active = False
+        self._host_power_buf: Optional[np.ndarray] = None
 
         self.bundle = build_step_bundle(cfg, shape, mesh)
         self.ckpt = (CheckpointManager(tcfg.ckpt_dir)
@@ -129,7 +152,15 @@ class Trainer:
 
     # -- power hooks --------------------------------------------------------
     def _apply_power_plan(self, step: int) -> bool:
-        """Returns True if this step should RUN (False = shed/skip)."""
+        """Returns True if this step should RUN (False = shed/skip).
+
+        Delegates the plan -> decision mapping to the shared workload
+        actuator; the decision (run/skip, power cap fraction, model
+        throughput) lands in ``self.last_decision`` for telemetry and the
+        step history.  A *new* shed plan is a grid-event boundary: it
+        arms a checkpoint save (the train loop executes it before the
+        shed window starts).
+        """
         if self.gp is None:
             return True
         shed_plan = self.gp.poll_ffr()
@@ -137,23 +168,30 @@ class Trainer:
             self.plan = shed_plan
             self.events.append({"step": step, "event": "ffr_shed",
                                 "duty": shed_plan.duty_cycle})
-        if self.plan is None or not self.plan.ffr_shed:
-            return True
-        # duty-cycle shed: skip ceil((1-duty)*k) of every k steps
-        duty = self.plan.duty_cycle
-        k = 10
-        run_quota = int(round(duty * k))
-        return (step % k) < run_quota
+            if shed_plan.ffr_shed and self.tcfg.grid_event_ckpt and self.ckpt:
+                self._pending_grid_ckpt = True
+        self.last_decision = self.actuator.decide(step, self.plan)
+        return self.last_decision.run
 
     def telemetry(self, step_time_s: float, flops: float, bytes_: float):
-        """Export step telemetry to Tier-2 (host-power estimation)."""
+        """Export step telemetry to Tier-2 (host-power estimation).
+
+        The per-host power estimate runs the observed utilisation through
+        the plan's power cap (the workload model's actuation surface) and
+        fills a buffer allocated ONCE -- the old per-step ``np.full`` was
+        a fresh allocation on every training step.
+        """
         if self.gp is None:
             return
         load = load_from_cost_analysis(flops, bytes_, step_time_s)
-        host_power = np.full(
-            self.gp.n_hosts,
-            load * self.gp.chips_per_host * self.gp.chip_tdp, np.float32)
-        self.gp.observe_host_power(host_power)
+        if self.plan is not None:
+            load = min(load, self.last_decision.power_frac)
+        buf = self._host_power_buf
+        if buf is None or buf.shape[0] != self.gp.n_hosts:
+            buf = self._host_power_buf = np.empty(self.gp.n_hosts,
+                                                  np.float32)
+        buf.fill(load * self.gp.chips_per_host * self.gp.chip_tdp)
+        self.gp.observe_host_power(buf)
 
     # -- the loop ------------------------------------------------------------
     def train(self, params=None, opt=None,
@@ -177,10 +215,21 @@ class Trainer:
             if step >= tcfg.steps:
                 break
             run = self._apply_power_plan(step)
+            if self._pending_grid_ckpt and self.ckpt:
+                # grid-event checkpoint: persist state BEFORE honouring the
+                # shed plan (the dead time tier3.throughput_score prices)
+                self.ckpt.save(step, (params, opt),
+                               extra={"grid_event": True})
+                self.events.append({"step": step, "event": "grid_ckpt"})
+                self._pending_grid_ckpt = False
             if not run:
                 self.skipped_steps += 1
+                self._shed_active = True
                 step += 1
                 continue
+            if self._shed_active:
+                self.events.append({"step": step, "event": "resumed"})
+                self._shed_active = False
             t0 = time.perf_counter()
             with self.mesh:
                 params, opt, metrics = step_j(
@@ -193,7 +242,8 @@ class Trainer:
             if self.health.deadline_exceeded(dt, tcfg.step_deadline_factor):
                 self.events.append({"step": step, "event": "straggler_step",
                                     "dt": dt})
-            history.append({"step": step, "loss": loss, "dt": dt})
+            history.append({"step": step, "loss": loss, "dt": dt,
+                            "thr": self.last_decision.throughput_frac})
             if on_step:
                 on_step(step, metrics)
             if tcfg.log_every and step % tcfg.log_every == 0:

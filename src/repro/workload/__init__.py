@@ -1,0 +1,30 @@
+"""repro.workload: one power<->throughput model, many consumers.
+
+``model``      the pure-jnp DVFS/duty-cycle throughput curve, the
+               step-synchronous transient, and the workload-mix tables
+               (the axis ``ScenarioBatch.mix_idx`` indexes),
+``ckpt_cost``  checkpoint/restore dead-time model seeded from real
+               ``repro.ckpt`` manifests,
+``actuator``   the online surface: PowerPlan -> per-step StepDecision.
+
+The engine tick, ``tier3.throughput_score``, and the live trainer all
+read this package; nothing in it depends on them (no cycles).
+"""
+from repro.workload.actuator import (PowerActuator, RUN_FULL, StepDecision,
+                                     duty_run_quota)
+from repro.workload.ckpt_cost import (CkptCostModel, checkpoint_bytes,
+                                      grid_event_cost_s, manifest_bytes,
+                                      tree_bytes)
+from repro.workload.model import (CLOCK_W, DEFAULT_GRID_CKPT_S, MIX_ORDER,
+                                  STEP_PERIOD_S_DEFAULT, TOKENS_PER_MW_S,
+                                  clock_weight, mix_index, step_transient,
+                                  throughput_frac, tokens_per_mw_s)
+
+__all__ = [
+    "PowerActuator", "RUN_FULL", "StepDecision", "duty_run_quota",
+    "CkptCostModel", "checkpoint_bytes", "grid_event_cost_s",
+    "manifest_bytes", "tree_bytes",
+    "CLOCK_W", "DEFAULT_GRID_CKPT_S", "MIX_ORDER", "STEP_PERIOD_S_DEFAULT",
+    "TOKENS_PER_MW_S", "clock_weight", "mix_index", "step_transient",
+    "throughput_frac", "tokens_per_mw_s",
+]

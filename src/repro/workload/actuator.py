@@ -1,0 +1,92 @@
+"""Online actuator surface: PowerPlan -> per-step run/derate decisions.
+
+The trainer used to hard-code its own duty-cycle arithmetic (``k = 10``
+with ``round()`` half-even -- duty 0.05 rounded to a quota of 0 and shed
+*everything*).  This module is the single online consumer of the shared
+workload model: a :class:`PowerActuator` holds the mix and the duty
+quantum and turns the controller's plan into a :class:`StepDecision`
+(run/skip, the power-cap fraction, and the model's throughput at that
+cap), so the live loop and the offline engine derate through the same
+curve.
+
+Pure Python/numpy on the hot path -- the trainer calls this every step
+and must never pay a device round-trip for it.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, NamedTuple, Optional
+
+import repro.workload.model as model
+
+
+def duty_run_quota(duty: float, k: int) -> int:
+    """Steps to RUN out of every ``k`` under duty cycle ``duty``.
+
+    Floor semantics, not ``round()``: the quota may never exceed the
+    power commitment (floor), but any strictly positive duty runs at
+    least one step per window -- a 5 % duty at k=10 runs 1-in-10 instead
+    of the old half-even ``round(0.5) = 0`` which shed everything.
+    """
+    if k <= 0:
+        raise ValueError(f"duty quantum k must be positive, got {k}")
+    if duty <= 0.0:
+        return 0
+    if duty >= 1.0:
+        return k
+    return max(1, int(math.floor(duty * k + 1e-9)))
+
+
+class StepDecision(NamedTuple):
+    """What one training step should do under the current plan."""
+
+    run: bool                # execute the step (False = shed/skip)
+    power_frac: float        # per-chip power budget as fraction of TDP
+    throughput_frac: float   # model throughput at that budget (incl. duty)
+    grid_ckpt: bool          # save a checkpoint before honouring the plan
+
+
+RUN_FULL = StepDecision(run=True, power_frac=1.0, throughput_frac=1.0,
+                        grid_ckpt=False)
+
+
+@dataclass
+class PowerActuator:
+    """Maps (PowerPlan, step index) -> StepDecision via the shared model.
+
+    ``duty_quantum_steps`` is the shed window k: duty is quantised to
+    1/k steps (configurable; the old trainer hard-coded 10).  ``plan``
+    is duck-typed (anything with ``mu``/``duty_cycle``/``ffr_shed``), so
+    this module never imports the controller.
+    """
+
+    mix: str = "train"
+    duty_quantum_steps: int = 10
+
+    def __post_init__(self):
+        self.clock_w = model.clock_weight(self.mix)
+        if self.duty_quantum_steps <= 0:
+            raise ValueError("duty_quantum_steps must be positive, got "
+                             f"{self.duty_quantum_steps}")
+
+    def throughput_at(self, power_frac: float) -> float:
+        return float(model.throughput_frac(self.clock_w, power_frac))
+
+    def decide(self, step: int, plan: Optional[Any],
+               grid_ckpt: bool = False) -> StepDecision:
+        """One step's decision.  ``grid_ckpt=True`` marks a plan boundary
+        where the caller should save before honouring the shed."""
+        if plan is None:
+            return RUN_FULL
+        power_frac = min(max(float(plan.mu), 0.0), 1.0)
+        thr = self.throughput_at(power_frac)
+        if not plan.ffr_shed:
+            return StepDecision(run=True, power_frac=power_frac,
+                                throughput_frac=thr, grid_ckpt=grid_ckpt)
+        k = self.duty_quantum_steps
+        quota = duty_run_quota(float(plan.duty_cycle), k)
+        run = (step % k) < quota
+        return StepDecision(run=run, power_frac=power_frac,
+                            throughput_frac=thr * quota / k,
+                            grid_ckpt=grid_ckpt)

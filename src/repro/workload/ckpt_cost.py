@@ -1,0 +1,77 @@
+"""Checkpoint/restore cost model for grid events.
+
+A reserve activation that preempts training is only checkpoint-safe if
+the state was saved first, and resuming replays the restore; both cost
+wall-clock the Tier-3 selector should price.  The model is seeded from
+the *real* ``repro.ckpt.manager`` artifacts: a manifest's leaf shapes and
+dtypes give the logical state size byte-for-byte (pinned against
+``tree_bytes`` of the live tree by the tests), and sequential save /
+restore bandwidths turn bytes into seconds.
+"""
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import numpy as np
+
+_MANIFEST = "manifest.json"
+
+
+def tree_bytes(tree: Any) -> int:
+    """Logical (uncompressed) byte size of a pytree's array leaves."""
+    return sum(int(np.asarray(leaf).nbytes) for leaf in jax.tree.leaves(tree))
+
+
+def manifest_bytes(manifest: dict) -> int:
+    """Logical byte size recorded in a ``repro.ckpt`` manifest.
+
+    Computed from the per-leaf ``shape``/``dtype`` entries (NOT the
+    compressed shard files), so it equals :func:`tree_bytes` of the tree
+    that was saved -- the parity the workload tests pin.
+    """
+    total = 0
+    for leaf in manifest["leaves"]:
+        n = int(np.prod(leaf["shape"], dtype=np.int64)) if leaf["shape"] \
+            else 1
+        total += n * np.dtype(leaf["dtype"]).itemsize
+    return int(total)
+
+
+def checkpoint_bytes(ckpt_dir: str) -> int:
+    """Logical state size of an on-disk checkpoint (its manifest)."""
+    with open(os.path.join(ckpt_dir, _MANIFEST)) as f:
+        return manifest_bytes(json.load(f))
+
+
+@dataclass(frozen=True)
+class CkptCostModel:
+    """Bytes -> seconds for the save/restore halves of a grid event.
+
+    Defaults are sequential-filesystem order of magnitude (the repo's
+    zlib-1 sharded writer); override with measured numbers per site.
+    """
+
+    write_bps: float = 2e9       # sustained checkpoint write bandwidth
+    read_bps: float = 4e9        # restore read bandwidth
+    overhead_s: float = 2.0      # barrier + manifest + process overhead
+
+    def save_seconds(self, nbytes: int) -> float:
+        return self.overhead_s + nbytes / self.write_bps
+
+    def restore_seconds(self, nbytes: int) -> float:
+        return self.overhead_s + nbytes / self.read_bps
+
+    def grid_event_seconds(self, nbytes: int) -> float:
+        """Dead time one grid event charges: save before the shed plus
+        restore on resume."""
+        return self.save_seconds(nbytes) + self.restore_seconds(nbytes)
+
+
+def grid_event_cost_s(state: Any,
+                      model: CkptCostModel = CkptCostModel()) -> float:
+    """Per-event checkpoint dead time for a live training state pytree."""
+    return model.grid_event_seconds(tree_bytes(state))

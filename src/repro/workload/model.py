@@ -1,0 +1,132 @@
+"""The ONE power<->throughput model every layer shares (workload side).
+
+GridPilot's claim is that MW-scale *training* load is sellable grid
+flexibility; the price of that flexibility is lost training throughput.
+This module is the single place that cost is modelled:
+
+  :func:`throughput_frac`   pure-jnp, differentiable power-cap ->
+                            throughput curve (DVFS above the clock floor,
+                            duty-cycling below it), built on the same
+                            ``plant`` DVFS physics Tier-1 actuates,
+  :func:`step_transient`    the step-synchronous power wave of
+                            synchronised training (EasyRider): compute
+                            phases draw above the mean, the optimizer /
+                            gradient-exchange dip draws below it,
+  mix tables                 per-workload-mix clock sensitivity and token
+                            rates, indexed by ``ScenarioBatch.mix_idx``.
+
+Consumers: ``tier3.throughput_score`` prices (mu, rho) cells with the
+curve, the engine tick accumulates realised throughput through it, and
+the live trainer's :class:`~repro.workload.actuator.PowerActuator` maps
+its ``PowerPlan`` to run/skip/derate decisions with it -- two offline
+tiers and the online loop reading one model instead of three forks.
+
+Everything here is pure jnp over scalars/arrays (vmap/scan/grad safe);
+the mix tables are plain numpy so static Python callers (the trainer)
+index them without device round-trips.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.core.plant as plant
+
+# ---------------------------------------------------------------------------
+# Workload mixes: how clock-bound the fleet's jobs are, and what a unit of
+# throughput is worth in tokens.
+# ---------------------------------------------------------------------------
+
+MIX_ORDER = ("train", "inference", "balanced")
+
+# weight of the clock-bound (matmul) term in the throughput blend; the
+# remainder follows the HBM-bound branch of plant.throughput (0.45 + 0.55
+# f/f_nom).  Large training steps are compute-dominated; serving is
+# bandwidth-dominated; "balanced" is a mixed fleet.
+CLOCK_W = np.asarray([0.88, 0.15, 0.50], np.float32)
+
+# tokens per second per MW of design IT power at full throughput.  Order
+# of magnitude from public large-run numbers (~1e4 tokens/s/MW-scale runs
+# normalised to site MW); only ratios between (mu, rho) cells matter to
+# the selector, the absolute rate just makes settlement rows legible.
+TOKENS_PER_MW_S = np.asarray([250e3, 400e3, 300e3], np.float32)
+
+# step-synchronous transient defaults (EasyRider): one optimizer step
+# every ~10 s at this scale; the dip is the comm/optimizer phase.  At the
+# twin's 1 Hz tick the 80/20 split of a 10 s period lands on integer
+# seconds, so the sampled wave is exactly zero-mean too.
+STEP_PERIOD_S_DEFAULT = 10.0
+STEP_COMPUTE_FRAC = 0.8          # fraction of the step in compute phase
+
+# default checkpoint+restore dead time charged per grid event when no
+# measured manifest is available (see repro.workload.ckpt_cost).
+DEFAULT_GRID_CKPT_S = 30.0
+
+# ---------------------------------------------------------------------------
+# DVFS / duty-cycle curve anchors (derived from the plant model once).
+# ---------------------------------------------------------------------------
+
+# per-chip power at the DVFS floor clock under full load: below this cap
+# fraction no clock exists, the only actuation left is duty-cycling.
+P_FLOOR_FRAC = float(plant.power_model(plant.F_MIN, 1.0) / plant.TDP)
+P_IDLE_FRAC = float(plant.P_IDLE / plant.TDP)
+# the clock the governor reaches with the full TDP budget at full load
+F_AT_TDP = float(plant.freq_at_cap(plant.TDP, 1.0))
+_MEM_AT_TDP = 0.45 + 0.55 * F_AT_TDP / plant.F_NOMINAL
+
+
+def mix_index(mix: str) -> int:
+    """MIX_ORDER index of a mix name (raises on unknown mixes)."""
+    try:
+        return MIX_ORDER.index(mix)
+    except ValueError:
+        raise ValueError(
+            f"unknown workload mix {mix!r}; expected one of {MIX_ORDER}")
+
+
+def clock_weight(mix: str) -> float:
+    return float(CLOCK_W[mix_index(mix)])
+
+
+def tokens_per_mw_s(mix: str) -> float:
+    return float(TOKENS_PER_MW_S[mix_index(mix)])
+
+
+def throughput_frac(clock_w, power_frac) -> jax.Array:
+    """Normalised throughput in [0, 1] at per-chip power ``power_frac``.
+
+    ``power_frac`` is the chip power budget as a fraction of TDP (the
+    engine feeds the realised cluster L, the trainer feeds its plan's
+    mu).  Above the DVFS floor the governor picks the clock the budget
+    affords (``plant.freq_at_cap`` at full load) and throughput blends
+    the clock-bound and HBM-bound branches by ``clock_w``; below the
+    floor the only lever is duty-cycling, linear in power between the
+    idle floor and the DVFS floor.  Monotone non-decreasing and
+    differentiable in ``power_frac`` (piecewise-smooth: kinks at the
+    floor and at TDP), and exactly 1.0 at full power -- so it is usable
+    both as a scan-side accumulator weight and under ``jax.grad``.
+    """
+    clock_w = jnp.asarray(clock_w, jnp.float32)
+    p = jnp.asarray(power_frac, jnp.float32)
+    f = plant.freq_at_cap(jnp.clip(p, P_FLOOR_FRAC, 1.0) * plant.TDP, 1.0)
+    clock = f / F_AT_TDP
+    mem = (0.45 + 0.55 * f / plant.F_NOMINAL) / _MEM_AT_TDP
+    r_dvfs = clock_w * clock + (1.0 - clock_w) * mem
+    duty = jnp.clip((p - P_IDLE_FRAC) / (P_FLOOR_FRAC - P_IDLE_FRAC),
+                    0.0, 1.0)
+    return jnp.where(p < P_FLOOR_FRAC, duty * r_dvfs, r_dvfs)
+
+
+def step_transient(t_s, period_s, amp) -> jax.Array:
+    """Multiplicative step-synchronous load wave, mean 1 over a period.
+
+    Synchronised training alternates a compute phase (above-mean draw)
+    with a comm/optimizer dip; ``amp`` is the peak-to-mean depth of the
+    dip and the compute boost is sized so the wave integrates to 1 --
+    ``amp=0`` is exactly the constant 1 (the pre-workload twin).
+    """
+    t = jnp.asarray(t_s, jnp.float32)
+    frac = jnp.mod(t, period_s) / period_s
+    boost = amp * (1.0 - STEP_COMPUTE_FRAC) / STEP_COMPUTE_FRAC
+    return jnp.where(frac < STEP_COMPUTE_FRAC, 1.0 + boost, 1.0 - amp)

@@ -93,3 +93,61 @@ def test_pid_rollout_batch_matches_serial():
     for i, ref in enumerate(serial):
         np.testing.assert_allclose(np.asarray(traces[i]), np.asarray(ref),
                                    atol=1e-4, err_msg=f"scenario {i}")
+
+
+def _stack_grid(cells):
+    """list-of-lists of pytrees -> one pytree with (S, H) leading axes."""
+    rows = [jax.tree.map(lambda *a: jnp.stack(a), *row) for row in cells]
+    return jax.tree.map(lambda *a: jnp.stack(a), *rows)
+
+
+_GRID_TARGETS = (120.0, 180.0, 240.0, 300.0)   # S operating points
+_GRID_LOADS = (0.6, 0.8, 0.97)                 # H demand archetypes
+
+
+def _grid_inputs(n_chips, n_ticks):
+    states = _stack_grid([[pid.init_pid(n_chips, 250.0)
+                           for _ in _GRID_LOADS] for _ in _GRID_TARGETS])
+    plants = _stack_grid([[plant.init_plant(n_chips, cap=300.0)
+                           for _ in _GRID_LOADS] for _ in _GRID_TARGETS])
+    targets = jnp.stack([jnp.full((len(_GRID_LOADS), n_ticks, n_chips), t)
+                         for t in _GRID_TARGETS])
+    loads = jnp.broadcast_to(
+        jnp.asarray(_GRID_LOADS)[None, :, None, None],
+        (len(_GRID_TARGETS), len(_GRID_LOADS), n_ticks, n_chips))
+    return states, plants, targets, loads
+
+
+def test_pid_rollout_grid_matches_flattened_batch():
+    """The (S, H) product rollout == pid_rollout_batch over the flattened
+    S*H axis -- one vmap(vmap(scan)), no hand-picked diagonal."""
+    n_chips, n_ticks = 2, 100
+    states, plants, targets, loads = _grid_inputs(n_chips, n_ticks)
+    S, H = len(_GRID_TARGETS), len(_GRID_LOADS)
+    _, _, grid_tr = pid.pid_rollout_grid(states, plants, targets, loads,
+                                         tau_ms=6.0)
+    flat = lambda tree: jax.tree.map(
+        lambda a: a.reshape((S * H,) + a.shape[2:]), tree)
+    _, _, batch_tr = pid.pid_rollout_batch(
+        flat(states), flat(plants), flat(targets), flat(loads), tau_ms=6.0)
+    np.testing.assert_allclose(
+        np.asarray(grid_tr).reshape(S * H, n_ticks, n_chips),
+        np.asarray(batch_tr), atol=1e-4)
+
+
+def test_quasi_static_settling_over_full_product():
+    """Tier-1 quasi-static check over the WHOLE (target x load) product:
+    within one twin tick (1 s = 200 Tier-1 ticks) every cell settles to
+    min(demand, target) -- the assumption the 1 Hz twin builds on."""
+    n_chips, n_ticks = 1, 200
+    states, plants, targets, loads = _grid_inputs(n_chips, n_ticks)
+    _, _, trace = pid.pid_rollout_grid(states, plants, targets, loads,
+                                       tau_ms=6.0)
+    final = np.asarray(trace)[:, :, -1, 0]                        # (S, H)
+    demand = np.asarray(plant.power_model(plant.F_NOMINAL,
+                                          np.asarray(_GRID_LOADS)))
+    expect = np.minimum(demand[None, :], np.asarray(_GRID_TARGETS)[:, None])
+    np.testing.assert_allclose(final, expect, rtol=0.02, atol=4.0)
+    # and the settled cell is static: the last 20 ticks barely move
+    tail = np.asarray(trace)[:, :, -20:, 0]
+    assert np.abs(tail - final[:, :, None]).max() < 4.0

@@ -88,6 +88,83 @@ def test_elastic_resize_restores(tmp_path):
     assert out["history"][-1]["step"] >= 8
 
 
+class _FakeGP:
+    """Duck-typed GridPilot stand-in for the trainer's power hooks."""
+
+    def __init__(self, n_hosts=3, chips_per_host=2, chip_tdp=300.0,
+                 plans=()):
+        self.n_hosts = n_hosts
+        self.chips_per_host = chips_per_host
+        self.chip_tdp = chip_tdp
+        self._plans = list(plans)
+        self.observed = []
+
+    def poll_ffr(self):
+        return self._plans.pop(0) if self._plans else None
+
+    def observe_host_power(self, buf):
+        self.observed.append(np.array(buf, copy=True))
+
+
+def _shed_plan(duty):
+    from repro.core.controller import PowerPlan
+    return PowerPlan(mu=0.5, rho=0.1, duty_cycle=duty, replica_scale=1.0,
+                     cap_tokens_frac=1.0, ffr_shed=True)
+
+
+def test_duty_quantum_configurable_and_small_duty_runs():
+    """The shed window k is TrainerConfig.duty_quantum_steps, and a 5 %
+    duty runs exactly 1-in-k -- the old hard-coded k=10 with round()
+    half-even rounded the quota to 0 and shed everything."""
+    t = _trainer(steps=2, duty_quantum_steps=20)
+    t.gp = _FakeGP()
+    t.plan = _shed_plan(0.05)
+    assert sum(t._apply_power_plan(s) for s in range(20)) == 1
+    t10 = _trainer(steps=2)  # default quantum
+    t10.gp = _FakeGP()
+    t10.plan = _shed_plan(0.05)
+    assert sum(t10._apply_power_plan(s) for s in range(10)) == 1
+    # and the decision carries the workload model's throughput
+    assert 0.0 < t10.last_decision.throughput_frac < 1.0
+
+
+def test_grid_event_arms_checkpoint(tmp_path):
+    """A NEW shed plan arms the grid-event checkpoint save (only when a
+    checkpoint manager exists)."""
+    t = _trainer(steps=2, ckpt_dir=str(tmp_path))
+    t.gp = _FakeGP(plans=[_shed_plan(0.2)])
+    t._apply_power_plan(0)
+    assert t._pending_grid_ckpt
+    assert any(e["event"] == "ffr_shed" for e in t.events)
+    t2 = _trainer(steps=2)  # no ckpt_dir -> nothing to arm
+    t2.gp = _FakeGP(plans=[_shed_plan(0.2)])
+    t2._apply_power_plan(0)
+    assert not t2._pending_grid_ckpt
+
+
+def test_telemetry_host_power_buffer_hoisted():
+    """telemetry() reuses ONE per-host buffer across steps (the old code
+    paid an np.full allocation every step) and reports the same values."""
+    from repro.core.plant import load_from_cost_analysis
+    t = _trainer(steps=2)
+    gp = _FakeGP(n_hosts=3, chips_per_host=2, chip_tdp=300.0)
+    t.gp = gp
+    t.telemetry(0.1, 1e12, 1e10)
+    buf = t._host_power_buf
+    t.telemetry(0.1, 1e12, 1e10)
+    assert t._host_power_buf is buf
+    load = load_from_cost_analysis(1e12, 1e10, 0.1)
+    np.testing.assert_allclose(
+        gp.observed[-1], np.full(3, load * 2 * 300.0, np.float32),
+        rtol=1e-6)
+    # under a plan the report is capped at the decision's power budget
+    t.plan = _shed_plan(0.5)
+    t.last_decision = t.actuator.decide(0, t.plan)
+    t.telemetry(0.001, 1e15, 1e12)  # saturated load -> capped at mu
+    np.testing.assert_allclose(
+        gp.observed[-1], np.full(3, 0.5 * 2 * 300.0, np.float32), rtol=1e-6)
+
+
 def test_straggler_detection():
     from repro.train.trainer import HostHealth
     h = HostHealth(n_hosts=4)

@@ -1,0 +1,362 @@
+"""The shared workload model: the ONE power<->throughput curve the engine
+accumulates, Tier-3 prices, and the live trainer actuates.
+
+Pins: monotonicity + differentiability of the curve, the duty-quota
+rounding edge cases (the old `round()` half-even shed-everything bug),
+checkpoint-cost parity against a real `repro.ckpt` save/restore
+round-trip, and the zero-weight guarantee -- workload machinery wired in
+everywhere but weighted 0 must reproduce the throughput-blind engine and
+selector bit-for-bit."""
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core.engine as eng
+import repro.core.tier3 as tier3
+import repro.workload.ckpt_cost as ckpt_cost
+import repro.workload.model as wl
+from repro.ckpt.manager import CheckpointManager
+from repro.grid.scenarios import build_scenario_batch, product_specs
+from repro.workload import (RUN_FULL, CkptCostModel, PowerActuator,
+                            duty_run_quota)
+
+
+# ---------------------------------------------------------------------------
+# throughput_frac: the DVFS/duty-cycle curve
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mix", wl.MIX_ORDER)
+def test_throughput_monotone_in_power(mix):
+    cw = wl.clock_weight(mix)
+    p = jnp.linspace(0.0, 1.2, 401)
+    g = np.asarray(wl.throughput_frac(cw, p))
+    assert (np.diff(g) >= -1e-6).all()
+    assert g.min() >= 0.0 and g.max() <= 1.0 + 1e-6
+
+
+@pytest.mark.parametrize("mix", wl.MIX_ORDER)
+def test_throughput_grad_nonnegative(mix):
+    """Differentiable AND monotone under jax.grad (usable in an outer
+    gradient-based tuner, the design requirement of the pure-jnp curve)."""
+    cw = wl.clock_weight(mix)
+    dg = jax.vmap(jax.grad(lambda p: wl.throughput_frac(cw, p)))(
+        jnp.linspace(0.01, 1.1, 201))
+    assert np.isfinite(np.asarray(dg)).all()
+    assert float(jnp.min(dg)) >= -1e-6
+
+
+def test_throughput_anchors():
+    for mix in wl.MIX_ORDER:
+        cw = wl.clock_weight(mix)
+        # full power = full throughput, exactly (the engine's reference)
+        assert float(wl.throughput_frac(cw, 1.0)) == pytest.approx(
+            1.0, abs=1e-6)
+        # at/below idle there is nothing left to duty-cycle
+        assert float(wl.throughput_frac(cw, wl.P_IDLE_FRAC)) == 0.0
+        assert float(wl.throughput_frac(cw, 0.0)) == 0.0
+        # the duty branch joins the DVFS branch continuously at the floor
+        lo = float(wl.throughput_frac(cw, wl.P_FLOOR_FRAC - 1e-4))
+        hi = float(wl.throughput_frac(cw, wl.P_FLOOR_FRAC + 1e-4))
+        assert abs(hi - lo) < 1e-2
+
+
+def test_clock_bound_mix_more_power_sensitive():
+    """A compute-bound mix loses more throughput to a power cap than a
+    bandwidth-bound one (the whole point of the mix axis)."""
+    g_train = float(wl.throughput_frac(wl.clock_weight("train"), 0.6))
+    g_inf = float(wl.throughput_frac(wl.clock_weight("inference"), 0.6))
+    assert g_train < g_inf
+
+
+def test_step_transient_zero_mean_and_off():
+    t = jnp.arange(int(wl.STEP_PERIOD_S_DEFAULT))
+    wave = np.asarray(wl.step_transient(t, wl.STEP_PERIOD_S_DEFAULT, 0.25))
+    # 1 Hz samples of one period integrate to exactly the mean draw
+    assert wave.mean() == pytest.approx(1.0, abs=1e-6)
+    assert wave.max() > 1.0 and wave.min() < 1.0
+    # amp=0 is exactly the constant 1: the pre-workload twin graph
+    off = np.asarray(wl.step_transient(t, wl.STEP_PERIOD_S_DEFAULT, 0.0))
+    np.testing.assert_array_equal(off, np.ones_like(off))
+
+
+def test_mix_index_rejects_unknown():
+    with pytest.raises(ValueError, match="unknown workload mix"):
+        wl.mix_index("mining")
+
+
+# ---------------------------------------------------------------------------
+# duty quota + actuator: the satellite-1 rounding bug
+# ---------------------------------------------------------------------------
+
+
+def test_duty_run_quota_edge_cases():
+    # the old trainer: int(round(0.05 * 10)) == 0 (half-even) -> shed ALL
+    assert duty_run_quota(0.05, 10) == 1
+    assert duty_run_quota(0.05, 20) == 1
+    assert duty_run_quota(0.25, 10) == 2
+    assert duty_run_quota(0.0, 10) == 0
+    assert duty_run_quota(-0.1, 10) == 0
+    assert duty_run_quota(1.0, 10) == 10
+    assert duty_run_quota(1.5, 10) == 10
+    # floor semantics: never exceed the commitment...
+    assert duty_run_quota(0.999, 10) == 9
+    assert duty_run_quota(0.39, 10) == 3
+    # ...but float noise at an exact multiple must not round down
+    assert duty_run_quota(0.3, 10) == 3
+    assert duty_run_quota(0.7, 10) == 7
+
+
+def test_duty_run_quota_monotone_and_bounded():
+    for k in (1, 3, 10, 16, 100):
+        quotas = [duty_run_quota(d, k) for d in np.linspace(0.0, 1.0, 97)]
+        assert all(b >= a for a, b in zip(quotas, quotas[1:]))
+        assert all(0 <= q <= k for q in quotas)
+    with pytest.raises(ValueError, match="positive"):
+        duty_run_quota(0.5, 0)
+
+
+class _Plan:
+    """Duck-typed PowerPlan stand-in (the actuator never imports the
+    controller)."""
+
+    def __init__(self, mu=0.9, duty=1.0, shed=False):
+        self.mu, self.duty_cycle, self.ffr_shed = mu, duty, shed
+
+
+def test_actuator_no_plan_runs_full():
+    a = PowerActuator()
+    assert a.decide(0, None) is RUN_FULL
+    assert a.decide(7, None).throughput_frac == 1.0
+
+
+def test_actuator_caps_without_shedding():
+    a = PowerActuator(mix="train")
+    d = a.decide(3, _Plan(mu=0.6))
+    assert d.run and d.power_frac == pytest.approx(0.6)
+    assert d.throughput_frac == pytest.approx(
+        float(wl.throughput_frac(wl.clock_weight("train"), 0.6)), abs=1e-6)
+
+
+def test_actuator_shed_runs_quota_per_window():
+    a = PowerActuator(duty_quantum_steps=10)
+    plan = _Plan(mu=0.5, duty=0.05, shed=True)
+    ran = [a.decide(s, plan).run for s in range(10)]
+    assert sum(ran) == 1  # the old round() half-even shed all 10
+    # throughput folds the duty quantisation in
+    assert a.decide(0, plan).throughput_frac == pytest.approx(
+        float(wl.throughput_frac(a.clock_w, 0.5)) / 10.0, abs=1e-6)
+
+
+def test_actuator_quantum_configurable():
+    a = PowerActuator(duty_quantum_steps=20)
+    plan = _Plan(duty=0.05, shed=True)
+    assert sum(a.decide(s, plan).run for s in range(20)) == 1
+    with pytest.raises(ValueError, match="duty_quantum_steps"):
+        PowerActuator(duty_quantum_steps=0)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint cost model: parity with the real repro.ckpt artifacts
+# ---------------------------------------------------------------------------
+
+
+def _tree():
+    return {"w": np.arange(24, dtype=np.float32).reshape(6, 4),
+            "b": np.ones((4,), np.float16),
+            "step": np.int32(7)}
+
+
+def test_ckpt_bytes_match_real_manifest(tmp_path):
+    tree = _tree()
+    mgr = CheckpointManager(str(tmp_path), n_shards=2)
+    path = mgr.save(3, tree)
+    # the manifest's logical size == the live tree's, byte for byte
+    assert ckpt_cost.checkpoint_bytes(path) == ckpt_cost.tree_bytes(tree)
+    with open(os.path.join(path, "manifest.json")) as f:
+        assert ckpt_cost.manifest_bytes(json.load(f)) == \
+            24 * 4 + 4 * 2 + 4
+    # and the round trip restores the exact shapes/dtypes it was costed on
+    restored, step, _ = mgr.restore(jax.tree.map(np.zeros_like, tree))
+    assert step == 3
+    for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves(tree)):
+        assert np.asarray(a).shape == np.asarray(b).shape
+        assert np.asarray(a).dtype == np.asarray(b).dtype
+    assert ckpt_cost.tree_bytes(restored) == ckpt_cost.tree_bytes(tree)
+
+
+def test_ckpt_cost_seconds():
+    m = CkptCostModel(write_bps=1e9, read_bps=2e9, overhead_s=1.0)
+    assert m.save_seconds(2e9) == pytest.approx(3.0)
+    assert m.restore_seconds(2e9) == pytest.approx(2.0)
+    assert m.grid_event_seconds(2e9) == pytest.approx(5.0)
+    assert ckpt_cost.grid_event_cost_s(_tree(), m) == pytest.approx(
+        m.grid_event_seconds(ckpt_cost.tree_bytes(_tree())))
+
+
+# ---------------------------------------------------------------------------
+# Tier-3: the workload term in J(mu, rho)
+# ---------------------------------------------------------------------------
+
+
+def test_throughput_score_shape_and_preferences():
+    cw = wl.clock_weight("train")
+    mu = jnp.asarray(tier3.MU_GRID, jnp.float32)
+    s_free = np.asarray(tier3.throughput_score(mu, 0.0, cw, 0))
+    assert s_free.min() >= 0.0 and s_free.max() <= 1.0 + 1e-6
+    # more power = more tokens; the top of the grid is the reference 1.0
+    assert (np.diff(s_free) >= -1e-6).all()
+    assert s_free[-1] == pytest.approx(1.0, abs=1e-6)
+    # a committed band costs tokens (shed windows + ckpt dead time)
+    s_band = float(tier3.throughput_score(0.9, 0.3, cw, 0, ckpt_cost_s=30.0))
+    assert s_band < float(tier3.throughput_score(0.9, 0.0, cw, 0,
+                                                 ckpt_cost_s=30.0))
+    # the ckpt dead time itself is priced
+    assert s_band < float(tier3.throughput_score(0.9, 0.3, cw, 0,
+                                                 ckpt_cost_s=0.0))
+
+
+def test_zero_weight_selection_bit_exact():
+    """weights=(.., w_tok=0) with the workload graph traced in == the
+    3-weight pre-workload selector, bit for bit."""
+    g = jnp.linspace(0.0, 1.0, 24)
+    ta = jnp.linspace(5.0, 30.0, 24)
+    base = tier3.select_operating_points(
+        g, ta, pue_aware=True, weights=(tier3.W_FFR, tier3.W_CFE, 0.25),
+        use_revenue=True)
+    wk = tier3.select_operating_points(
+        g, ta, pue_aware=True,
+        weights=(tier3.W_FFR, tier3.W_CFE, 0.25, 0.0),
+        clock_w=wl.clock_weight("train"), ckpt_cost_s=30.0,
+        use_revenue=True, use_workload=True)
+    np.testing.assert_array_equal(np.asarray(base.mu), np.asarray(wk.mu))
+    np.testing.assert_array_equal(np.asarray(base.rho), np.asarray(wk.rho))
+
+
+def test_workload_weight_shifts_selection():
+    g = jnp.linspace(0.0, 1.0, 24)
+    ta = jnp.full((24,), 15.0)
+    blind = tier3.select_operating_points(g, ta, pue_aware=True)
+    sel = tier3.Tier3Selector(w_tok=0.8, workload_mix="train")
+    aware = sel.select_hour(g, ta)
+    changed = (~np.isclose(np.asarray(aware.mu), np.asarray(blind.mu)) |
+               ~np.isclose(np.asarray(aware.rho), np.asarray(blind.rho)))
+    assert changed.any()
+    # tokens push toward running harder (throughput_score is monotone in
+    # power); rho has no guaranteed direction -- the higher mu relaxes
+    # the feasibility floor and can afford a larger band
+    assert np.asarray(aware.mu).mean() >= np.asarray(blind.mu).mean() - 1e-6
+
+
+def test_selector_objective_matches_grid_choice():
+    sel = tier3.Tier3Selector(w_tok=0.5, w_rev=0.2)
+    op = sel.select_hour(0.7, 12.0)
+    MU, RHO = np.meshgrid(tier3.MU_GRID, tier3.RHO_GRID, indexing="ij")
+    J = np.asarray(sel.objective(
+        jnp.asarray(MU, jnp.float32), jnp.asarray(RHO, jnp.float32),
+        0.7, 12.0))
+    best = np.unravel_index(np.argmax(J), J.shape)
+    assert float(op.mu) == pytest.approx(float(MU[best]))
+    assert float(op.rho) == pytest.approx(float(RHO[best]))
+
+
+def test_pad_weights():
+    np.testing.assert_array_equal(
+        np.asarray(tier3._pad_weights((0.5, 0.4))),
+        np.asarray([0.5, 0.4, 0.0, 0.0], np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(tier3._pad_weights((1.0, 2.0, 3.0, 4.0))),
+        np.asarray([1.0, 2.0, 3.0, 4.0], np.float32))
+    with pytest.raises(ValueError, match="at most 4"):
+        tier3._pad_weights((1.0,) * 5)
+
+
+# ---------------------------------------------------------------------------
+# engine: zero-weight parity + token settlement
+# ---------------------------------------------------------------------------
+
+_CFG = eng.EngineConfig(n_hosts=2, chips_per_host=2, e_max=8,
+                        events_per_day=48.0)
+
+
+def _batch(mix):
+    specs = product_specs(countries=("DE",), seeds=(2,), horizon_h=2,
+                          products=("FFR",), reserve_rhos=(0.2,),
+                          event_seeds=(3,), workload_mixes=(mix,))
+    return build_scenario_batch(specs)
+
+
+def test_zero_weight_mix_axis_inert():
+    """With workload_weight=0 the mix axis must not perturb ANY
+    pre-workload output -- only the token accounting reads it."""
+    out_t = eng.engine_rollout(_CFG, _batch("train"))
+    out_i = eng.engine_rollout(_CFG, _batch("inference"))
+    token_keys = {"thr_mean", "tokens_mtok", "tokens_ckpt_mtok",
+                  "tokens_lost_mtok", "sched_tokens_mtok"}
+    for k in out_t:
+        if k in token_keys:
+            continue
+        for a, b in zip(jax.tree.leaves(out_t[k]),
+                        jax.tree.leaves(out_i[k])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=k)
+    # while the token accounting DOES flow through the mix tables
+    assert not np.allclose(np.asarray(out_t["tokens_mtok"]),
+                           np.asarray(out_i["tokens_mtok"]))
+
+
+def test_engine_token_settlement_sane():
+    out = eng.engine_rollout(_CFG, _batch("train"))
+    thr = np.asarray(out["thr_mean"])
+    assert (thr > 0.0).all() and (thr <= 1.0 + 1e-6).all()
+    assert (np.asarray(out["tokens_mtok"]) > 0.0).all()
+    # lost = reference - earned + ckpt dead time: nonnegative by
+    # construction (nothing beats flat-out at the top of the mu grid)
+    assert (np.asarray(out["tokens_lost_mtok"]) >= -1e-3).all()
+    assert (np.asarray(out["tokens_ckpt_mtok"]) > 0.0).all()
+    # consistency: earned + lost - ckpt == reference rate x valid seconds
+    T = float(np.asarray(out_hours := _batch("train").hours)[0]) * 3600.0
+    cw = wl.clock_weight("train")
+    ref = T * float(wl.throughput_frac(cw, float(tier3.MU_GRID[-1]))) * \
+        float(_batch("train").mw[0]) * wl.tokens_per_mw_s("train") / 1e6
+    got = (np.asarray(out["tokens_mtok"])[0]
+           + np.asarray(out["tokens_lost_mtok"])[0]
+           - np.asarray(out["tokens_ckpt_mtok"])[0])
+    assert got == pytest.approx(ref, rel=1e-4)
+
+
+def test_step_transient_engine_parity_when_off_and_visible_when_on():
+    base = eng.engine_rollout(_CFG, _batch("train"))
+    off = eng.engine_rollout(
+        dataclasses.replace(_CFG, step_transient_amp=0.0), _batch("train"))
+    for k in ("it_mwh", "fac_mwh", "net_eur", "thr_mean"):
+        np.testing.assert_array_equal(np.asarray(base[k]),
+                                      np.asarray(off[k]), err_msg=k)
+    on = eng.engine_rollout(
+        dataclasses.replace(_CFG, step_transient_amp=0.3), _batch("train"))
+    assert not np.allclose(np.asarray(on["it_mwh"]),
+                           np.asarray(base["it_mwh"]))
+
+
+def test_workload_weight_shifts_engine_operating_points():
+    """cfg.workload_weight > 0 re-prices the hourly grid search (the
+    acceptance criterion's throughput-priced vs -blind selection)."""
+    specs = product_specs(countries=("SE", "DE", "PL"), horizon_h=48,
+                          products=("FFR",))
+    batch = build_scenario_batch(specs)
+    base = eng.EngineConfig(with_seconds=False, rho_mode="tier3")
+    blind = eng.engine_rollout(base, batch)
+    priced = eng.engine_rollout(
+        dataclasses.replace(base, workload_weight=0.6), batch)
+    mu_b, rho_b = np.asarray(blind["mu_h"]), np.asarray(blind["rho_h"])
+    mu_p, rho_p = np.asarray(priced["mu_h"]), np.asarray(priced["rho_h"])
+    m = np.asarray(batch.mask) > 0
+    assert ((mu_b != mu_p) | (rho_b != rho_p))[m].any()
+    # and the quasi-static token account reflects the re-pricing
+    assert (np.asarray(priced["sched_tokens_mtok"]) >=
+            np.asarray(blind["sched_tokens_mtok"]) - 1e-6).all()
