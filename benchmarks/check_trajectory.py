@@ -1,0 +1,82 @@
+"""Bench trajectory gate: fail CI when a tracked metric regresses past
+its floor, read from the STRUCTURED ``out/bench_report.json`` (not by
+grepping the CSV stream, whose values may be RFC-4180 quoted).
+
+    PYTHONPATH=src python -m benchmarks.check_trajectory \
+        [--report benchmarks/out/bench_report.json]
+
+Tracked metrics and their floors come from the bench modules themselves
+(one source of truth -- the same constants the in-bench asserts use), so
+the gate and the bench cannot drift apart.  A tracked metric absent from
+the report (e.g. a ``--only`` subset or a skipped sharded run) is
+reported but not a failure; a present metric past its floor exits 1.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import operator
+import os
+import sys
+
+from benchmarks.engine_bench import (FAST_MIN_SPEEDUP_X, MIN_SPEEDUP_X,
+                                     SHARDED_MIN_SPEEDUP_X,
+                                     TELEMETRY_MAX_OVERHEAD_X)
+
+DEFAULT_REPORT = os.path.join(os.path.dirname(__file__), "out",
+                              "bench_report.json")
+
+
+def tracked_metrics(fast: bool) -> dict:
+    """name -> (op, floor, direction label); op(value, floor) must hold."""
+    return {
+        "engine.fused_vs_separate_x": (
+            operator.ge, FAST_MIN_SPEEDUP_X if fast else MIN_SPEEDUP_X,
+            ">="),
+        "engine_sharded.speedup_x": (
+            operator.ge, SHARDED_MIN_SPEEDUP_X, ">="),
+        "engine.telemetry_overhead_x": (
+            operator.le, TELEMETRY_MAX_OVERHEAD_X, "<="),
+    }
+
+
+def check(report: dict) -> list[str]:
+    """Returns failure messages (empty = trajectory holds)."""
+    rows = {r["name"]: r["value"] for r in report.get("rows", ())}
+    fast = bool(report.get("fast"))
+    failures = []
+    for name, (op, floor, label) in tracked_metrics(fast).items():
+        if name not in rows:
+            print(f"  {name:<34} absent (subset or skipped run)")
+            continue
+        value = float(rows[name])
+        ok = op(value, floor)
+        print(f"  {name:<34} {value:>8.3f}  (floor {label} {floor})"
+              f"  {'ok' if ok else 'REGRESSION'}")
+        if not ok:
+            failures.append(
+                f"{name} = {value:.3f} violates floor {label} {floor}")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--report", default=DEFAULT_REPORT)
+    args = ap.parse_args(argv)
+    if not os.path.exists(args.report):
+        print(f"trajectory check: no report at {args.report} "
+              "(run benchmarks.run first)", file=sys.stderr)
+        return 1
+    with open(args.report) as f:
+        report = json.load(f)
+    print(f"trajectory check: {args.report} "
+          f"(fast={bool(report.get('fast'))}, "
+          f"failures={report.get('failures')})")
+    failures = check(report)
+    for msg in failures:
+        print(f"TRAJECTORY REGRESSION: {msg}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,4 +1,15 @@
-"""Shared benchmark utilities: CSV emission + result capture."""
+"""Shared benchmark utilities: CSV emission + structured result capture.
+
+Every ``emit`` row is CSV-sanitised (RFC-4180-style quoting, so values
+carrying commas/quotes -- e.g. interpolated exception text -- cannot fork
+or corrupt the ``name,value,derived`` stream) and mirrored into an
+in-process buffer.  The driver (``benchmarks.run``) writes the buffered
+stream to ``out/bench.csv`` and a machine-readable
+``out/bench_report.json`` (rows + wall-clock spans + compile/run splits +
+device/mesh context) -- the artifacts CI uploads and
+``benchmarks/check_trajectory.py`` gates on.  Wall-clock timing routes
+through the ``repro.obs.trace`` span registry at full float precision.
+"""
 from __future__ import annotations
 
 import json
@@ -6,7 +17,12 @@ import os
 import time
 from contextlib import contextmanager
 
+from repro.obs import trace
+
 OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
+
+_ROWS: list[dict] = []      # every emitted row, in order
+_ENTRIES: list[dict] = []   # structured measurements (record_entry/measure)
 
 
 def ensure_out() -> str:
@@ -14,9 +30,58 @@ def ensure_out() -> str:
     return OUT_DIR
 
 
+def csv_field(value) -> str:
+    """Sanitise one field of the ``name,value,derived`` stream.
+
+    Newlines are flattened to spaces first: consumers treat the stream as
+    strictly one-row-per-line (the grading contract), so a multi-line
+    exception message must not fork rows even when quoted.  Fields
+    containing a comma or quote are then RFC-4180 quoted.
+    """
+    s = " ".join(str(value).split())
+    if "," in s or '"' in s:
+        s = '"' + s.replace('"', '""') + '"'
+    return s
+
+
 def emit(name: str, value, derived: str = "") -> None:
     """One CSV row: name,value,derived (the benchmarks.run contract)."""
-    print(f"{name},{value},{derived}", flush=True)
+    print(f"{csv_field(name)},{csv_field(value)},{csv_field(derived)}",
+          flush=True)
+    _ROWS.append(dict(name=str(name), value=value, derived=str(derived)))
+
+
+def record_entry(name: str, **fields) -> dict:
+    """Attach one structured measurement to the bench report."""
+    rec = dict(name=name, ts=time.time(), **fields)
+    _ENTRIES.append(rec)
+    return rec
+
+
+def measure(name: str, fn, *, sync=None, reps: int = 2):
+    """Time ``fn`` with a compile-vs-run split.
+
+    The first call pays trace+compile+run; the steady state is best-of
+    ``reps`` (the standard de-noised estimate under CPU contention).  Both
+    are recorded as spans and as one structured report entry whose
+    ``compile_s`` is the first-call excess over steady state.  Returns
+    ``(first_result, first_call_s, run_s)``.
+    """
+    sync = sync if sync is not None else (lambda r: r)
+    with trace.span(f"bench.{name}.first"):
+        t0 = time.perf_counter()
+        result = fn()
+        sync(result)
+        first_s = time.perf_counter() - t0
+    best = float("inf")
+    for _ in range(max(reps, 1)):
+        with trace.span(f"bench.{name}.run"):
+            t0 = time.perf_counter()
+            sync(fn())
+            best = min(best, time.perf_counter() - t0)
+    record_entry(name, first_call_s=first_s, run_s=best,
+                 compile_s=max(first_s - best, 0.0))
+    return result, first_s, best
 
 
 def save_json(fname: str, payload) -> str:
@@ -29,6 +94,38 @@ def save_json(fname: str, payload) -> str:
 
 @contextmanager
 def timed(label: str):
-    t0 = time.perf_counter()
-    yield
-    emit(f"{label}.wall_s", round(time.perf_counter() - t0, 2))
+    """Emit ``<label>.wall_s`` at full float precision (a 2-decimal round
+    used to collapse sub-10 ms spans -- exactly the scale of the paper's
+    97.2 ms claim) and record the span in the registry."""
+    with trace.span(f"bench.{label}"):
+        t0 = time.perf_counter()
+        yield
+        dt = time.perf_counter() - t0
+    emit(f"{label}.wall_s", dt)
+
+
+def write_csv(fname: str = "bench.csv") -> str:
+    """Mirror every emitted row to ``out/bench.csv`` (the CI artifact)."""
+    ensure_out()
+    path = os.path.join(OUT_DIR, fname)
+    with open(path, "w") as f:
+        f.write("name,value,derived\n")
+        for r in _ROWS:
+            f.write(f"{csv_field(r['name'])},{csv_field(r['value'])},"
+                    f"{csv_field(r['derived'])}\n")
+    return path
+
+
+def write_report(fname: str = "bench_report.json", **extra) -> str:
+    """The structured artifact: rows + measurements + spans + device/mesh
+    context, one JSON file CI uploads and the trajectory check reads."""
+    tr = trace.get_tracer()
+    payload = dict(
+        device=trace.device_context(),
+        rows=_ROWS,
+        entries=_ENTRIES,
+        spans=[r for r in tr.records if r["kind"] == "span"],
+        span_summaries=tr.metrics.all_summaries(),
+        counters=tr.metrics.counters,
+        **extra)
+    return save_json(fname, payload)

@@ -27,7 +27,8 @@ def main(argv=None) -> int:
                             e3_ar4, e4_closed_loop, e7_fr_latency,
                             e8_multicountry, e9_reserve, engine_bench,
                             roofline, workload_bench)
-    from benchmarks.common import emit
+    from benchmarks.common import emit, write_csv, write_report
+    from repro.obs import trace
 
     suite = [
         ("e1", lambda: e1_calibration.run()),
@@ -49,17 +50,25 @@ def main(argv=None) -> int:
     only = set(args.only.split(",")) if args.only else None
     print("name,value,derived")
     failures = 0
-    for name, fn in suite:
-        if only and name not in only:
-            continue
-        t0 = time.time()
-        try:
-            fn()
-            emit(f"{name}.status", "ok", f"{time.time()-t0:.1f}s")
-        except Exception as e:  # noqa: BLE001
-            traceback.print_exc()
-            emit(f"{name}.status", f"FAIL {e}", "")
-            failures += 1
+    with trace.profile():  # opt-in device trace: REPRO_JAX_PROFILE_DIR
+        for name, fn in suite:
+            if only and name not in only:
+                continue
+            t0 = time.time()
+            try:
+                with trace.span(f"suite.{name}", fast=bool(args.fast)):
+                    fn()
+                emit(f"{name}.status", "ok", f"{time.time()-t0:.1f}s")
+            except Exception as e:  # noqa: BLE001
+                traceback.print_exc()
+                # emit() CSV-sanitises the interpolated exception text, so
+                # commas/newlines in the message cannot fork the stream
+                emit(f"{name}.status", f"FAIL {e}", "")
+                failures += 1
+    write_csv()
+    path = write_report(fast=bool(args.fast), failures=failures,
+                        only=sorted(only) if only else None)
+    trace.get_tracer().export_jsonl(path.replace(".json", ".jsonl"))
     return 1 if failures else 0
 
 

@@ -38,6 +38,7 @@ import numpy as np
 
 import repro.core.pue as pue_lib
 import repro.workload.model as workload_lib
+from repro.obs import trace
 
 SIGMA_PCT = 66.0
 BETA_CUTOFF = 0.7
@@ -285,6 +286,17 @@ class GridPilotDispatcher:
                 DeprecationWarning, stacklevel=2)
         horizon = int(horizon_h if horizon_h is not None else len(self.ci))
         horizon = min(horizon, len(self.ci))
+        with trace.span("dispatch.run", horizon_h=horizon,
+                        n_jobs=len(jobs), reserve_rho=reserve_rho,
+                        pue_aware=self.pue_aware) as run_attrs:
+            stats = self._run_loop(jobs, horizon, reserve_rho)
+            run_attrs["dispatched"] = stats.dispatched
+            run_attrs["deferred"] = stats.deferred
+            run_attrs["backfilled"] = stats.backfilled
+        return stats
+
+    def _run_loop(self, jobs: list[Job], horizon: int,
+                  reserve_rho: float) -> DispatchStats:
         pending: list[tuple] = []   # heap by (submit, jid)
         arrivals = sorted(jobs, key=lambda j: j.submit_h)
         ai = 0
@@ -383,10 +395,11 @@ class GridPilotDispatcher:
         ci = self.ci[:horizon].astype(np.float32)
         t_amb = self.t_amb[:horizon].astype(np.float32)
         mask = np.ones_like(mu)
-        tot = {k: float(v) for k, v in replay_schedule(
-            mu, ci, t_amb, mask, pue_design=self.pue_design,
-            green_ci=float(self.green_ci),
-            design_w=self.design_it_w).items()}
+        with trace.span("dispatch.account", horizon_h=horizon):
+            tot = {k: float(v) for k, v in replay_schedule(
+                mu, ci, t_amb, mask, pue_design=self.pue_design,
+                green_ci=float(self.green_ci),
+                design_w=self.design_it_w).items()}
         stats.it_energy_mwh = tot["it"] / 1e6        # W*h -> MWh
         stats.facility_energy_mwh = tot["fac"] / 1e6
         stats.co2_t = tot["co2"] / 1e9               # W*h * g/kWh -> t

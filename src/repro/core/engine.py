@@ -67,6 +67,7 @@ import repro.core.tier3 as tier3_lib
 import repro.core.twin as twin_lib
 import repro.grid.frequency as frequency
 import repro.grid.markets as markets
+import repro.obs.telemetry as obs_tel
 import repro.workload.model as workload_lib
 from repro.grid.scenarios import ScenarioBatch, frequency_seeds, \
     masked_quantile
@@ -109,6 +110,15 @@ class EngineConfig:
     ckpt_cost_s: float = workload_lib.DEFAULT_GRID_CKPT_S
     step_transient_amp: float = 0.0
     step_period_s: float = workload_lib.STEP_PERIOD_S_DEFAULT
+    # in-graph telemetry taps (repro.obs.telemetry): True threads a
+    # second accumulator pytree through the hierarchical scan and adds a
+    # "telemetry" dict to the rollout output (per-hour controller-health
+    # moments, day-level fixed-bucket histograms, per-event
+    # trigger-to-target response times vs the product budget -- all
+    # O(N*H + N*B)).  Statically gated at the Python level, so False (the
+    # default) is the pre-telemetry graph bit-for-bit (same pattern as
+    # workload_weight=0).
+    telemetry: bool = False
     # seconds-tier toggle: False runs the hourly tiers only (Tier-3 search
     # + schedule energy accounting), the E8 configuration
     with_seconds: bool = True
@@ -379,6 +389,8 @@ def _rollout_one(cfg: EngineConfig, reduce: str, ci, t_amb, mask, hours,
     xs = ((below_b, in_hor_b, hours_idx) if base_loads is None else
           (base_loads.reshape(B, K, -1), below_b, in_hor_b, hours_idx))
 
+    design_host = cfg.chips_per_host * cfg.chip_tdp
+
     def hour_body(state, xb):
         if base_loads is None:
             below_r, in_r, b = xb
@@ -388,14 +400,39 @@ def _rollout_one(cfg: EngineConfig, reduce: str, ci, t_amb, mask, hours,
         hp = _hour_params(params, b)
         t_row = b * K + jnp.arange(K, dtype=jnp.int32)
 
-        def tick(st, x):
+        def tick(carry, x):
+            st = carry[0] if cfg.telemetry else carry
             st, (sec, m) = _engine_tick(cfg, hp, st, x)
-            return st, ((sec, m) if reduce == "full" else sec)
+            out_t = (sec, m) if reduce == "full" else sec
+            if cfg.telemetry:
+                # telemetry rides a per-hour accumulator in the inner
+                # carry (reset each hour, emitted as OUTER ys below):
+                # pure elementwise sums off the tick's loop-carried
+                # critical path, fused by XLA into the engine's own
+                # accumulator update -- no per-tick buffer store.  Gated
+                # on the STATIC cfg.telemetry flag so the default-False
+                # scan body is the pre-telemetry body unchanged.
+                _, _, in_t, t_t = x
+                g_t = in_t.astype(jnp.float32)
+                ta = obs_tel.accum_update(
+                    carry[1], state=st, m=m, g=g_t,
+                    w=g_t * (t_t >= cfg.warmup_s))
+                return (st, ta), out_t
+            return st, out_t
 
-        return jax.lax.scan(tick, state, (loads_r, below_r, in_r, t_row),
-                            unroll=cfg.unroll)
+        xs_r = (loads_r, below_r, in_r, t_row)
+        if cfg.telemetry:
+            (state, ta), ys = jax.lax.scan(
+                tick, (state, obs_tel.accum_init()), xs_r,
+                unroll=cfg.unroll)
+            # the hour's telemetry sums leave through the outer ys: the
+            # outer scan stacks them to (B, ...) -- never (T, ...)
+            return state, (ys, ta)
+        return jax.lax.scan(tick, state, xs_r, unroll=cfg.unroll)
 
     state, ys = jax.lax.scan(hour_body, engine_init(cfg, key), xs)
+    if cfg.telemetry:
+        ys, tel_h = ys
     # flatten the (B, K, ...) stacks back to a seconds axis
     ys = jax.tree.map(lambda a: a.reshape((T,) + a.shape[2:]), ys)
     sec, metrics = ys if reduce == "full" else (ys, None)
@@ -467,6 +504,12 @@ def _rollout_one(cfg: EngineConfig, reduce: str, ci, t_amb, mask, hours,
         tokens_ckpt_mtok=tokens_ckpt_mtok,
         tokens_lost_mtok=tokens_ref_mtok - tokens_mtok + tokens_ckpt_mtok,
     )
+    if cfg.telemetry:
+        out["telemetry"] = obs_tel.finalize(
+            tel_h, design_host=design_host, events=events,
+            budget_ms=jnp.asarray(markets.BUDGET_MS)[product_idx],
+            load_sec=sec.load, valid_s=valid_s, warmup_s=cfg.warmup_s,
+            last_load=state.last_load)
     if reduce == "full":
         out["metrics"] = metrics
         out["trig"] = sec.trig
@@ -639,6 +682,12 @@ def engine_rollout(cfg: EngineConfig, batch: ScenarioBatch, *,
     are generated *in-scan* from the counter-based PRNG, so the rollout's
     peak input memory is O(N*H_max) -- no (N, T, H) buffer exists unless
     the caller materialises one.
+
+    With ``cfg.telemetry=True`` the output gains a ``"telemetry"`` dict
+    (per-hour health moments, day-level histograms, per-event response
+    times vs the product's activation budget -- see
+    ``repro.obs.telemetry``); leaves stay (N,), (N, H_max), (N, B) or
+    (N, e_max), so summary mode keeps its O(N*H + N*B) output bound.
 
     ``mesh`` shards the sweep over devices: pass a Mesh with a
     ``"scenario"`` axis (see ``repro.launch.mesh.make_scenario_mesh``) or

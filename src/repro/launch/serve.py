@@ -6,6 +6,13 @@ Runs the reduced config on the local mesh: prefill a batch of prompts,
 then decode tokens step by step.  With --gridpilot, an FFR trigger fired
 mid-decode sheds the token budget (batch thinning) within one decode step
 -- the serving-side analogue of the trainer's duty-cycle shed.
+
+Instrumented with ``repro.obs``: prefill/decode are spans, the
+trigger-to-thinning path is a ``serve.ffr_response`` span whose wall
+time is the serving-side trigger-to-target latency (compare against the
+700 ms FFR activation budget), and the shed itself is a traced
+``serve.shed`` event.  ``run_serve`` returns the stats dict so tests can
+drive the full path in-process.
 """
 from __future__ import annotations
 
@@ -16,16 +23,22 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import trace
 
-def main(argv=None) -> int:
+
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-1.5b")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--decode-tokens", type=int, default=32)
     ap.add_argument("--gridpilot", action="store_true")
-    args = ap.parse_args(argv)
+    ap.add_argument("--island-port", type=int, default=47311,
+                    help="UDP port for the GridPilot safety island")
+    return ap
 
+
+def run_serve(args) -> dict:
     from repro.configs import get_arch
     from repro.launch.mesh import make_local_mesh
     from repro.models import build_model
@@ -43,24 +56,26 @@ def main(argv=None) -> int:
     gp = None
     if args.gridpilot:
         from repro.core.controller import GridPilot
-        gp = GridPilot(n_hosts=1, chips_per_host=1, island_port=47311)
+        gp = GridPilot(n_hosts=1, chips_per_host=1,
+                       island_port=args.island_port)
         gp.current_row = 23
         gp.island.arm(23)
 
     # prefill: run the full prompt, then replay it into the decode cache
     # (teacher-forced) so decode starts from a warm cache.
     t0 = time.perf_counter()
-    if cfg.family == "encdec":
-        frames = 0.02 * jax.random.normal(
-            key, (b, cfg.encoder_seq, cfg.d_model), jnp.float32)
-        from repro.models import encdec as encdec_lib
-        enc = encdec_lib.encode(cfg, params, frames, dtype=jnp.float32)
-        xk, xv = encdec_lib.precompute_cross_kv(cfg, params, enc)
-        cache = model.init_cache(b, total)
-        cache["xk"], cache["xv"] = xk, xv
-    else:
-        logits = model.forward(params, {"tokens": tokens})
-        cache = model.init_cache(b, total)
+    with trace.span("serve.prefill", arch=args.arch, batch=b, prompt_len=s):
+        if cfg.family == "encdec":
+            frames = 0.02 * jax.random.normal(
+                key, (b, cfg.encoder_seq, cfg.d_model), jnp.float32)
+            from repro.models import encdec as encdec_lib
+            enc = encdec_lib.encode(cfg, params, frames, dtype=jnp.float32)
+            xk, xv = encdec_lib.precompute_cross_kv(cfg, params, enc)
+            cache = model.init_cache(b, total)
+            cache["xk"], cache["xv"] = xk, xv
+        else:
+            logits = model.forward(params, {"tokens": tokens})
+            cache = model.init_cache(b, total)
     t_prefill = time.perf_counter() - t0
 
     decode = jax.jit(model.decode_step)
@@ -70,30 +85,57 @@ def main(argv=None) -> int:
 
     outs = []
     shed_at = None
+    response_ms = None
     t0 = time.perf_counter()
     cur = tokens[:, -1]
     active = b
-    for i in range(args.decode_tokens):
-        if gp is not None and i == args.decode_tokens // 2:
-            gp.fire_test_trigger()
-            time.sleep(0.005)
-            plan = gp.poll_ffr()
-            if plan is not None:
-                active = max(1, int(b * plan.duty_cycle))
-                shed_at = i
-        logits, cache = decode(params, cache, cur)
-        cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        outs.append(np.asarray(cur[:active]))
+    with trace.span("serve.decode", steps=args.decode_tokens) as dec_attrs:
+        for i in range(args.decode_tokens):
+            if gp is not None and i == args.decode_tokens // 2:
+                with trace.span("serve.ffr_response",
+                                step=i) as resp_attrs:
+                    gp.fire_test_trigger()
+                    time.sleep(0.005)
+                    plan = gp.poll_ffr()
+                    if plan is not None:
+                        active = max(1, int(b * plan.duty_cycle))
+                        shed_at = i
+                        resp_attrs["duty_cycle"] = plan.duty_cycle
+                        resp_attrs["shed"] = True
+                if shed_at is not None:
+                    # span wall time IS the trigger-to-thinning latency
+                    rec = trace.get_tracer().spans("serve.ffr_response")[-1]
+                    response_ms = rec["wall_s"] * 1e3
+                    trace.event("serve.shed", step=i, batch_from=b,
+                                batch_to=active,
+                                duty_cycle=plan.duty_cycle,
+                                response_ms=response_ms)
+                    trace.metrics.inc("serve.sheds")
+            logits, cache = decode(params, cache, cur)
+            cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            outs.append(np.asarray(cur[:active]))
+        dec_attrs["batch_final"] = active
     t_decode = time.perf_counter() - t0
+    trace.metrics.observe("serve.decode_ms_per_tok",
+                          t_decode / args.decode_tokens * 1e3)
 
     print(f"prefill {b}x{s}: {t_prefill*1e3:.1f} ms; "
           f"decode {args.decode_tokens} steps: {t_decode*1e3:.1f} ms "
           f"({t_decode/args.decode_tokens*1e3:.2f} ms/tok)")
     if shed_at is not None:
         print(f"FFR shed at decode step {shed_at}: batch {b} -> {active} "
-              "(token-budget thinning)")
+              f"(token-budget thinning, {response_ms:.1f} ms "
+              "trigger-to-thinning)")
     if gp is not None:
         gp.close()
+    return dict(t_prefill_s=t_prefill, t_decode_s=t_decode,
+                shed_at=shed_at, batch=b, active=active,
+                response_ms=response_ms, mesh=mesh)
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    run_serve(args)
     return 0
 
 

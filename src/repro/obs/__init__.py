@@ -1,0 +1,14 @@
+"""repro.obs — two-sided observability for the GridPilot reproduction.
+
+In-graph: `repro.obs.telemetry` (pure-jnp accumulators threaded through
+the engine scan when `EngineConfig.telemetry=True`).  Host-side:
+`repro.obs.trace` (span/counter registry with JSONL export) and
+`python -m repro.obs.report` (latency-budget compliance tables).
+"""
+from repro.obs import telemetry, trace
+from repro.obs.trace import event, get_tracer, metrics, profile, span
+
+__all__ = [
+    "telemetry", "trace",
+    "span", "event", "metrics", "get_tracer", "profile",
+]

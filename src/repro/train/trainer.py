@@ -43,6 +43,7 @@ from repro.configs.base import ArchConfig, ShapeConfig
 from repro.core.controller import GridPilot, PowerPlan
 from repro.core.plant import load_from_cost_analysis
 from repro.data.tokens import TokenPipeline
+from repro.obs import trace
 from repro.train.step import StepBundle, build_step_bundle
 from repro.workload import RUN_FULL, PowerActuator, StepDecision
 
@@ -150,6 +151,18 @@ class Trainer:
             encoder_seq=c.encoder_seq if c.family == "encdec" else 0,
         )
 
+    # -- events ------------------------------------------------------------
+    def _event(self, step: int, name: str, **attrs) -> dict:
+        """Record a trainer event in BOTH streams: the host-side span
+        tracer (``train.<name>``, exportable as JSONL) and the legacy
+        ``self.events`` ledger.  One dict object backs both -- the attrs
+        dict the tracer returns is appended verbatim, so the
+        ``{"step", "event", ...}`` schema callers assert on is unchanged.
+        """
+        rec = trace.event(f"train.{name}", step=step, event=name, **attrs)
+        self.events.append(rec)
+        return rec
+
     # -- power hooks --------------------------------------------------------
     def _apply_power_plan(self, step: int) -> bool:
         """Returns True if this step should RUN (False = shed/skip).
@@ -166,8 +179,8 @@ class Trainer:
         shed_plan = self.gp.poll_ffr()
         if shed_plan is not None:
             self.plan = shed_plan
-            self.events.append({"step": step, "event": "ffr_shed",
-                                "duty": shed_plan.duty_cycle})
+            self._event(step, "ffr_shed", duty=shed_plan.duty_cycle)
+            trace.metrics.inc("train.ffr_sheds")
             if shed_plan.ffr_shed and self.tcfg.grid_event_ckpt and self.ckpt:
                 self._pending_grid_ckpt = True
         self.last_decision = self.actuator.decide(step, self.plan)
@@ -202,7 +215,7 @@ class Trainer:
         start_step = 0
         if self.ckpt and self.ckpt.latest_step() is not None:
             (params, opt), start_step, _ = self.ckpt.restore((params, opt))
-            self.events.append({"step": start_step, "event": "restored"})
+            self._event(start_step, "restored")
 
         step_j = self.bundle.jitted()
         pipe = self._pipeline()
@@ -218,17 +231,19 @@ class Trainer:
             if self._pending_grid_ckpt and self.ckpt:
                 # grid-event checkpoint: persist state BEFORE honouring the
                 # shed plan (the dead time tier3.throughput_score prices)
-                self.ckpt.save(step, (params, opt),
-                               extra={"grid_event": True})
-                self.events.append({"step": step, "event": "grid_ckpt"})
+                with trace.span("train.grid_ckpt", step=step):
+                    self.ckpt.save(step, (params, opt),
+                                   extra={"grid_event": True})
+                self._event(step, "grid_ckpt")
                 self._pending_grid_ckpt = False
             if not run:
                 self.skipped_steps += 1
+                trace.metrics.inc("train.skipped_steps")
                 self._shed_active = True
                 step += 1
                 continue
             if self._shed_active:
-                self.events.append({"step": step, "event": "resumed"})
+                self._event(step, "resumed")
                 self._shed_active = False
             t0 = time.perf_counter()
             with self.mesh:
@@ -237,11 +252,11 @@ class Trainer:
             loss = float(metrics["loss"])
             dt = time.perf_counter() - t0
             self.health.step_times.append(dt)
+            trace.metrics.observe("train.step_ms", dt * 1e3)
             for h in range(self.health.n_hosts):
                 self.health.beat(h)
             if self.health.deadline_exceeded(dt, tcfg.step_deadline_factor):
-                self.events.append({"step": step, "event": "straggler_step",
-                                    "dt": dt})
+                self._event(step, "straggler_step", dt=dt)
             history.append({"step": step, "loss": loss, "dt": dt,
                             "thr": self.last_decision.throughput_frac})
             if on_step:
@@ -268,6 +283,6 @@ class Trainer:
         """
         t = Trainer(self.cfg, self.shape, new_mesh, self.tcfg,
                     gridpilot=self.gp, seed=self.seed)
-        t.events = self.events + [{"event": "resized",
-                                   "mesh": str(new_mesh.shape)}]
+        t.events = self.events + [trace.event(
+            "train.resized", event="resized", mesh=str(new_mesh.shape))]
         return t

@@ -1,0 +1,70 @@
+"""Serve-side shed path, end to end: an FFR trigger fired mid-decode
+thins the batch within one decode step, and the whole trigger-to-target
+path is metered through repro.obs (the paper's serving-side analogue of
+Table 1's trigger-to-target measurement)."""
+import argparse
+import time
+
+import numpy as np
+import pytest
+
+import repro.core  # noqa: F401  (resolves the grid<->core import cycle)
+from repro.grid import markets
+from repro.launch.serve import build_parser, run_serve
+from repro.obs import trace
+
+PORT = 47613  # own port: must not collide with train/serve defaults
+
+
+def _args(**kw):
+    defaults = dict(arch="smollm-135m", requests=4, prompt_len=4,
+                    decode_tokens=8, gridpilot=True, island_port=PORT)
+    defaults.update(kw)
+    return argparse.Namespace(**defaults)
+
+
+def test_island_port_flag():
+    ap = build_parser()
+    assert ap.parse_args([]).island_port == 47311  # default unchanged
+    assert ap.parse_args(["--island-port", "47619"]).island_port == 47619
+
+
+def test_ffr_shed_thins_batch_and_is_traced():
+    trace.get_tracer().clear()
+    out = run_serve(_args())
+
+    # the shed actually happened, mid-decode, within the same step
+    assert out["shed_at"] == 8 // 2
+    assert out["active"] < out["batch"]
+    assert out["active"] >= 1
+
+    # the shed is a traced event carrying the thinning and its latency
+    evs = trace.get_tracer().events("serve.shed")
+    assert len(evs) == 1
+    at = evs[0]["attrs"]
+    assert at["batch_from"] == 4 and at["batch_to"] == out["active"]
+    assert 0.0 < at["duty_cycle"] < 1.0
+
+    # trigger-to-thinning response span exists and beats the FFR budget
+    spans = trace.get_tracer().spans("serve.ffr_response")
+    assert len(spans) == 1
+    resp_ms = spans[0]["wall_s"] * 1e3
+    assert resp_ms == pytest.approx(out["response_ms"])
+    budget_ms = float(
+        markets.BUDGET_MS[markets.PRODUCT_ORDER.index("FFR")])
+    assert resp_ms < budget_ms, (
+        f"serve shed response {resp_ms:.1f} ms exceeds the "
+        f"{budget_ms:.0f} ms FFR budget")
+
+    # prefill/decode phases are spans too (the bench's compile/run split)
+    assert trace.get_tracer().spans("serve.prefill")
+    dec = trace.get_tracer().spans("serve.decode")
+    assert dec and dec[0]["attrs"]["batch_final"] == out["active"]
+    assert trace.metrics.counters.get("serve.sheds") == 1
+
+
+def test_no_gridpilot_no_shed():
+    trace.get_tracer().clear()
+    out = run_serve(_args(gridpilot=False, decode_tokens=4))
+    assert out["shed_at"] is None and out["active"] == out["batch"]
+    assert not trace.get_tracer().events("serve.shed")
