@@ -22,6 +22,9 @@ import sys
 from benchmarks.engine_bench import (FAST_MIN_SPEEDUP_X, MIN_SPEEDUP_X,
                                      SHARDED_MIN_SPEEDUP_X,
                                      TELEMETRY_MAX_OVERHEAD_X)
+from benchmarks.service_bench import (SERVICE_MAX_P99_MS,
+                                      SERVICE_MAX_RSS_GROWTH_MB,
+                                      SERVICE_MIN_TICKS_PER_S)
 
 DEFAULT_REPORT = os.path.join(os.path.dirname(__file__), "out",
                               "bench_report.json")
@@ -37,6 +40,12 @@ def tracked_metrics(fast: bool) -> dict:
             operator.ge, SHARDED_MIN_SPEEDUP_X, ">="),
         "engine.telemetry_overhead_x": (
             operator.le, TELEMETRY_MAX_OVERHEAD_X, "<="),
+        "service.p99_trigger_to_target_ms": (
+            operator.lt, SERVICE_MAX_P99_MS, "<"),
+        "service.ticks_per_s": (
+            operator.ge, SERVICE_MIN_TICKS_PER_S, ">="),
+        "service.rss_growth_mb": (
+            operator.le, SERVICE_MAX_RSS_GROWTH_MB, "<="),
     }
 
 

@@ -1,0 +1,117 @@
+"""`service`: the online control service under a Poisson trigger storm.
+
+Admits >= 1000 concurrent sites into a :class:`repro.service.SiteStore`,
+then drives the :class:`~repro.service.server.ServiceServer` dispatch
+loop with the load generator: a bulk frequency feed every tick plus
+Poisson FFR arrivals and periodic simultaneous-trigger storms, every
+trigger taking the island bypass and resolving through the single
+donated-buffer batched ``engine_step``.
+
+Gates (the same constants ``benchmarks/check_trajectory.py`` imports):
+
+  * ``p99 trigger-to-target < SERVICE_MAX_P99_MS`` (the 700 ms Nordic
+    FFR activation budget -- the paper's headline envelope) measured
+    through ``repro.obs`` over the timed window only,
+  * a steady-state throughput floor ``SERVICE_MIN_TICKS_PER_S`` on the
+    batched tick (one tick = one simulated second for the whole fleet),
+  * ``SERVICE_MAX_RSS_GROWTH_MB``: steady-state RSS stays pinned across
+    the run -- the donated-buffer step allocates no per-tick host memory
+    (a leaked device buffer per tick at this fleet width would blow
+    through the ceiling within a few hundred ticks),
+  * the hot tick compiles exactly once (churn + storms never retrace).
+"""
+from __future__ import annotations
+
+import asyncio
+import os
+
+import numpy as np
+
+from benchmarks.common import emit, record_entry, save_json
+
+SERVICE_MAX_P99_MS = 700.0       # FFR activation budget (markets.BUDGET_MS)
+SERVICE_MIN_TICKS_PER_S = 3.0    # fleet ticks/s floor (measured ~12 fast,
+#                                  2-core reference container; ~4x headroom
+#                                  for shared-runner contention)
+SERVICE_MAX_RSS_GROWTH_MB = 64.0  # steady-state RSS ceiling over the run
+
+_PAGE = os.sysconf("SC_PAGESIZE")
+
+
+def _rss_mb() -> float:
+    with open("/proc/self/statm") as f:
+        return int(f.read().split()[1]) * _PAGE / 2**20
+
+
+def run(fast: bool = False) -> dict:
+    from repro.core.engine import EngineConfig
+    from repro.service import (LoadGen, LoadGenConfig, ServiceConfig,
+                               ServiceServer, SiteStore, demo_batch)
+
+    n_sites = 1024
+    horizon_h = 2 if fast else 24
+    n_ticks = 120 if fast else 600
+    gen_cfg = LoadGenConfig(
+        n_ticks=n_ticks, warmup_ticks=2,
+        trigger_rate_per_site_day=400.0,
+        storm_every=n_ticks // 6, storm_sites=64, seed=0)
+    cfg = ServiceConfig(engine=EngineConfig(), capacity=n_sites,
+                        horizon_h=horizon_h, seed=0)
+    server = ServiceServer(cfg)
+    slots = server.admit_sites(
+        demo_batch(n_sites, horizon_h, products=("FFR", "FCR-D")))
+    emit("service.n_sites", len(slots), "concurrent resident sites")
+
+    SiteStore.clear_step_cache()
+    # compile + first-touch warmup OUTSIDE the RSS window: the gate is on
+    # steady-state growth, not the one-time XLA program/buffer footprint
+    for _ in range(2):
+        server.step_once()
+    rss0 = _rss_mb()
+    gen = LoadGen(gen_cfg)
+    stats = asyncio.run(gen.drive(server, slots))
+    rss_growth = _rss_mb() - rss0
+    server.close()
+
+    cache = SiteStore.step_cache_size()
+    emit("service.ticks", stats["ticks"],
+         "timed fleet ticks (1 tick = 1 simulated second)")
+    emit("service.ticks_per_s", round(stats["ticks_per_s"], 2),
+         f"gate: >= {SERVICE_MIN_TICKS_PER_S}")
+    emit("service.n_triggers", stats["n_triggers"],
+         f"Poisson + {stats['n_storms']} storm bursts, island bypass each")
+    emit("service.p50_trigger_to_target_ms",
+         round(stats["p50_trigger_to_target_ms"], 2),
+         "ingestion -> batched physics applied")
+    emit("service.p99_trigger_to_target_ms",
+         round(stats["p99_trigger_to_target_ms"], 2),
+         f"gate: < {SERVICE_MAX_P99_MS} (FFR activation budget)")
+    emit("service.rss_growth_mb", round(rss_growth, 1),
+         f"gate: <= {SERVICE_MAX_RSS_GROWTH_MB} (donated-buffer tick)")
+    emit("service.step_cache_size", cache,
+         "compiled hot-tick programs (gate: == 1, churn never retraces)")
+    record_entry("service", **stats, rss_growth_mb=rss_growth,
+                 step_cache_size=cache)
+    res = dict(stats, rss_growth_mb=rss_growth, step_cache_size=cache,
+               n_sites=len(slots), fast=fast)
+    save_json("service_bench.json", res)
+
+    assert stats["n_resolved"] > 0, "no triggers resolved: load gen is dead"
+    assert stats["p99_trigger_to_target_ms"] < SERVICE_MAX_P99_MS, (
+        f"service p99 trigger-to-target "
+        f"{stats['p99_trigger_to_target_ms']:.1f} ms >= "
+        f"{SERVICE_MAX_P99_MS} ms FFR budget")
+    assert stats["ticks_per_s"] >= SERVICE_MIN_TICKS_PER_S, (
+        f"service throughput {stats['ticks_per_s']:.2f} ticks/s < "
+        f"{SERVICE_MIN_TICKS_PER_S} floor at {len(slots)} sites")
+    assert rss_growth <= SERVICE_MAX_RSS_GROWTH_MB, (
+        f"service RSS grew {rss_growth:.1f} MB > "
+        f"{SERVICE_MAX_RSS_GROWTH_MB} MB over {stats['ticks']} ticks: "
+        "the donated-buffer tick is allocating per tick")
+    assert cache == 1, (
+        f"hot tick compiled {cache} programs (churn/storm retrace)")
+    return res
+
+
+if __name__ == "__main__":
+    run()

@@ -137,24 +137,15 @@ def host_load_params(n_hosts: int, key) -> HostLoadParams:
     )
 
 
-def host_loads_block(p: HostLoadParams, b) -> jax.Array:
-    """The (LOAD_BLOCK_S, H) demand rows of hour-block ``b``, from the
-    counter-based PRNG.
+def host_loads_rows(p: HostLoadParams, tf, fast) -> jax.Array:
+    """(K,) absolute seconds + (K, H) white noise -> (K, H) demand rows.
 
-    Pure function of (params, block index): ``fold_in(fast_key, b)``
-    seeds the block's white noise and everything else is a vectorised
-    function of the absolute second, so a scan level that walks hours can
-    synthesise its own demand input instead of gathering from a
-    materialised (T, H) buffer.  The trace builder
-    :func:`host_loads_trace` is the vmap of this function over blocks --
-    identical PRNG bits by construction, float path within 1 ulp (XLA
-    reassociates the slow-wave sum differently under vmap).
+    The deterministic body of the counter-based synthesis, factored out of
+    :func:`host_loads_block` so callers that draw their white noise on a
+    different counter granularity -- the online service's live per-tick
+    row (``repro.service.state``, one ``fold_in`` per second instead of
+    per hour block) -- run the IDENTICAL slow-wave/bursty demand model.
     """
-    t0 = jnp.asarray(b, jnp.int32) * LOAD_BLOCK_S
-    tf = (jnp.asarray(t0, jnp.float32)
-          + jnp.arange(LOAD_BLOCK_S, dtype=jnp.float32))        # (K,)
-    fast = jax.random.normal(jax.random.fold_in(p.fast_key, b),
-                             (LOAD_BLOCK_S,) + p.mean.shape)    # (K, H)
     # sin(w t + ph) expanded by angle addition: the trig-of-time factors
     # depend only on the block index, so under the engine's vmap over
     # scenarios they are computed ONCE for the whole batch (the libm sin
@@ -173,6 +164,27 @@ def host_loads_block(p: HostLoadParams, b) -> jax.Array:
     on = frac < plant_lib.BURSTY_DUTY
     bursty = jnp.where(on, base, plant_lib.BURSTY_LOW + 0.01 * fast)
     return jnp.clip(jnp.where(p.is_bursty, bursty, base), 0.0, 1.0)
+
+
+def host_loads_block(p: HostLoadParams, b) -> jax.Array:
+    """The (LOAD_BLOCK_S, H) demand rows of hour-block ``b``, from the
+    counter-based PRNG.
+
+    Pure function of (params, block index): ``fold_in(fast_key, b)``
+    seeds the block's white noise and everything else is a vectorised
+    function of the absolute second, so a scan level that walks hours can
+    synthesise its own demand input instead of gathering from a
+    materialised (T, H) buffer.  The trace builder
+    :func:`host_loads_trace` is the vmap of this function over blocks --
+    identical PRNG bits by construction, float path within 1 ulp (XLA
+    reassociates the slow-wave sum differently under vmap).
+    """
+    t0 = jnp.asarray(b, jnp.int32) * LOAD_BLOCK_S
+    tf = (jnp.asarray(t0, jnp.float32)
+          + jnp.arange(LOAD_BLOCK_S, dtype=jnp.float32))        # (K,)
+    fast = jax.random.normal(jax.random.fold_in(p.fast_key, b),
+                             (LOAD_BLOCK_S,) + p.mean.shape)    # (K, H)
+    return host_loads_rows(p, tf, fast)
 
 
 def host_loads_at(p: HostLoadParams, t) -> jax.Array:

@@ -61,8 +61,10 @@ def run_serve(args) -> dict:
         gp.current_row = 23
         gp.island.arm(23)
 
-    # prefill: run the full prompt, then replay it into the decode cache
-    # (teacher-forced) so decode starts from a warm cache.
+    # prefill: warm the decode cache by teacher-forcing the prompt --
+    # one pass over the prompt, no separate full forward whose logits
+    # would be thrown away.
+    decode = jax.jit(model.decode_step)
     t0 = time.perf_counter()
     with trace.span("serve.prefill", arch=args.arch, batch=b, prompt_len=s):
         if cfg.family == "encdec":
@@ -74,14 +76,10 @@ def run_serve(args) -> dict:
             cache = model.init_cache(b, total)
             cache["xk"], cache["xv"] = xk, xv
         else:
-            logits = model.forward(params, {"tokens": tokens})
             cache = model.init_cache(b, total)
+        for i in range(s):
+            _, cache = decode(params, cache, tokens[:, i])
     t_prefill = time.perf_counter() - t0
-
-    decode = jax.jit(model.decode_step)
-    # teacher-force the prompt through the cache
-    for i in range(s):
-        _, cache = decode(params, cache, tokens[:, i])
 
     outs = []
     shed_at = None
@@ -95,8 +93,14 @@ def run_serve(args) -> dict:
                 with trace.span("serve.ffr_response",
                                 step=i) as resp_attrs:
                     gp.fire_test_trigger()
-                    time.sleep(0.005)
+                    # bounded poll to the FFR activation budget: the span
+                    # measures the real trigger-to-thinning time instead
+                    # of a hard-coded 5 ms floor
+                    deadline = time.perf_counter() + 0.7
                     plan = gp.poll_ffr()
+                    while plan is None and time.perf_counter() < deadline:
+                        time.sleep(0.0002)
+                        plan = gp.poll_ffr()
                     if plan is not None:
                         active = max(1, int(b * plan.duty_cycle))
                         shed_at = i

@@ -209,6 +209,36 @@ def render_trace(records: list[dict], out=sys.stdout) -> None:
                 print(f"{r['name']:<32} n={r['count']:<6d} "
                       f"mean={r['mean']:.6f} p95={r['p95']:.6f} "
                       f"max={r['max']:.6f}", file=out)
+    _render_service(counters, observations, out)
+
+
+def _render_service(counters: list[dict], observations: list[dict],
+                    out=sys.stdout) -> None:
+    """Online-service health block: fleet counters + the trigger-to-target
+    distribution vs the FFR activation budget (``repro.service``)."""
+    c = {r["name"]: r["value"] for r in counters
+         if str(r.get("name", "")).startswith("service.")}
+    o = {r["name"]: r for r in observations
+         if str(r.get("name", "")).startswith("service.") and r.get("count")}
+    if not c and not o:
+        return
+    print("\n== online service ==", file=out)
+    print(f"  ticks {c.get('service.ticks', 0):g}"
+          f"  triggers {c.get('service.triggers', 0):g}"
+          f"  admitted {c.get('service.admitted', 0):g}"
+          f"  evicted {c.get('service.evicted', 0):g}"
+          f"  quarantined {c.get('service.quarantined', 0):g}"
+          f"  recovered {c.get('service.recovered', 0):g}", file=out)
+    lat = o.get("service.trigger_to_target_ms")
+    if lat:
+        p99 = lat.get("p99", lat.get("p95", 0.0))
+        print(f"  trigger-to-target  p50 {lat['p50']:.2f}  "
+              f"p99 {p99:.2f}  max {lat['max']:.2f} ms "
+              "(FFR activation budget 700 ms)", file=out)
+    step = o.get("service.step_ms")
+    if step:
+        print(f"  batched tick       p50 {step['p50']:.2f}  "
+              f"max {step['max']:.2f} ms", file=out)
 
 
 # ---------------------------------------------------------------------------

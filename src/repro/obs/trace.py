@@ -64,6 +64,12 @@ class Metrics:
     def counters(self) -> dict[str, float]:
         return dict(self._counters)
 
+    def series(self, name: str) -> list[float]:
+        """Copy of one observation series (windowed consumers -- e.g. the
+        service load generator's timed-phase percentiles -- slice it)."""
+        with self._lock:
+            return list(self._series.get(name, ()))
+
     def summary(self, name: str) -> dict:
         xs = np.asarray(self._series.get(name, ()), np.float64)
         if xs.size == 0:
@@ -73,6 +79,7 @@ class Metrics:
             mean=float(xs.mean()), min=float(xs.min()), max=float(xs.max()),
             p50=float(np.percentile(xs, 50)),
             p95=float(np.percentile(xs, 95)),
+            p99=float(np.percentile(xs, 99)),
         )
 
     def all_summaries(self) -> list[dict]:
