@@ -22,6 +22,9 @@ import sys
 from benchmarks.engine_bench import (FAST_MIN_SPEEDUP_X, MIN_SPEEDUP_X,
                                      SHARDED_MIN_SPEEDUP_X,
                                      TELEMETRY_MAX_OVERHEAD_X)
+from benchmarks.engine_fleet import (FLEET_MAX_RSS_GROWTH_MB,
+                                     FLEET_MIN_SCENARIO_DAYS,
+                                     FLEET_PARITY_RTOL)
 from benchmarks.service_bench import (SERVICE_MAX_P99_MS,
                                       SERVICE_MAX_RSS_GROWTH_MB,
                                       SERVICE_MIN_TICKS_PER_S)
@@ -46,6 +49,15 @@ def tracked_metrics(fast: bool) -> dict:
             operator.ge, SERVICE_MIN_TICKS_PER_S, ">="),
         "service.rss_growth_mb": (
             operator.le, SERVICE_MAX_RSS_GROWTH_MB, "<="),
+        # streaming fleet sweep: scale, constant memory, merge parity
+        "fleet.scenario_days": (
+            operator.ge, FLEET_MIN_SCENARIO_DAYS, ">="),
+        "fleet.rss_growth_mb": (
+            operator.le, FLEET_MAX_RSS_GROWTH_MB, "<="),
+        "fleet.parity_max_rel_err": (
+            operator.le, FLEET_PARITY_RTOL, "<="),
+        "fleet.dist.parity_max_rel_err": (
+            operator.le, FLEET_PARITY_RTOL, "<="),
     }
 
 

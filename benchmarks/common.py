@@ -30,6 +30,32 @@ def ensure_out() -> str:
     return OUT_DIR
 
 
+def rss_mb() -> float:
+    """Current resident set size (MB) via /proc/self/statm (Linux)."""
+    try:
+        with open("/proc/self/statm") as f:
+            return int(f.read().split()[1]) * os.sysconf("SC_PAGE_SIZE") / 2**20
+    except (OSError, ValueError, IndexError):
+        return 0.0
+
+
+def peak_rss_mb() -> float:
+    """Peak resident set size (MB) via /proc/self/status VmHWM (Linux).
+
+    The constant-memory claim of the streaming sweep is gated on this
+    number (see ``check_trajectory``), so it is recorded in every
+    ``measure`` entry and in the report header -- not just logged.
+    """
+    try:
+        with open("/proc/self/status") as f:
+            for line in f:
+                if line.startswith("VmHWM:"):
+                    return int(line.split()[1]) / 1024.0
+    except (OSError, ValueError, IndexError):
+        pass
+    return 0.0
+
+
 def csv_field(value) -> str:
     """Sanitise one field of the ``name,value,derived`` stream.
 
@@ -80,7 +106,8 @@ def measure(name: str, fn, *, sync=None, reps: int = 2):
             sync(fn())
             best = min(best, time.perf_counter() - t0)
     record_entry(name, first_call_s=first_s, run_s=best,
-                 compile_s=max(first_s - best, 0.0))
+                 compile_s=max(first_s - best, 0.0),
+                 rss_mb=rss_mb(), peak_rss_mb=peak_rss_mb())
     return result, first_s, best
 
 
@@ -122,6 +149,7 @@ def write_report(fname: str = "bench_report.json", **extra) -> str:
     tr = trace.get_tracer()
     payload = dict(
         device=trace.device_context(),
+        memory=dict(rss_mb=rss_mb(), peak_rss_mb=peak_rss_mb()),
         rows=_ROWS,
         entries=_ENTRIES,
         spans=[r for r in tr.records if r["kind"] == "span"],

@@ -28,7 +28,7 @@ from benchmarks.roofline import (HBM_BW, LINK_BW, PEAK_FLOPS, CHIPS, OUT,
                                  model_flops)
 from repro.configs import SHAPES, get_arch
 from repro.launch.dryrun import collective_bytes
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import pod_mesh
 from repro.train.step import build_step_bundle
 
 import numpy as np
@@ -89,7 +89,7 @@ def report(tag, cfg, shape, vals):
 
 
 def main():
-    mesh = make_production_mesh(multi_pod=False)
+    mesh = pod_mesh(multi_pod=False)
     rows = []
 
     # ---------------- Pair A: smollm-135m x train_4k --------------------

@@ -180,9 +180,9 @@ def compute_sweep(arch=None, shape_name=None) -> list:
     import jax
     assert len(jax.devices()) == 512
     from repro.configs.base import dryrun_cells
-    from repro.launch.mesh import make_production_mesh
+    from repro.launch.mesh import pod_mesh
 
-    mesh = make_production_mesh(multi_pod=False)
+    mesh = pod_mesh(multi_pod=False)
     path = os.path.join(OUT, "roofline.json")
     os.makedirs(OUT, exist_ok=True)
     # resume: keep rows for cells we are not re-running (incremental saves)

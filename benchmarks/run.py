@@ -26,7 +26,8 @@ def main(argv=None) -> int:
     from benchmarks import (cluster_24h, e1_calibration, e2_step_response,
                             e3_ar4, e4_closed_loop, e7_fr_latency,
                             e8_multicountry, e9_reserve, engine_bench,
-                            roofline, service_bench, workload_bench)
+                            engine_fleet, roofline, service_bench,
+                            workload_bench)
     from benchmarks.common import emit, write_csv, write_report
     from repro.obs import trace
 
@@ -45,6 +46,7 @@ def main(argv=None) -> int:
         ("engine_sharded",
          lambda: engine_bench.run_sharded(fast=args.fast)),
         ("service", lambda: service_bench.run(fast=args.fast)),
+        ("fleet", lambda: engine_fleet.run(fast=args.fast)),
         ("fig4", lambda: cluster_24h.run(fast=args.fast)),
         ("roofline", lambda: roofline.emit_table()),
     ]

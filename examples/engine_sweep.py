@@ -13,10 +13,13 @@ per-scenario settlement next to the carbon accounting.  Demand rows are
 generated in-scan from the counter-based PRNG, so nothing O(T) is built
 host-side.  With more than one local device the sweep reruns sharded
 over the scenario axis (``mesh="auto"``: shard_map + auto-padding) and
-checks it reproduces the single-device settlement.  Then closes the
-Tier-3 loop: the price-aware grid search (settlement revenue fed back
-into the (mu, rho) objective) picks different operating points than the
-price-blind one.
+checks it reproduces the single-device settlement.  Then streams a
+larger grid through ``engine_sweep`` -- chunked rollouts merged into
+running aggregates with donated buffers, memory O(chunk) -- and checks
+the streamed fleet view matches the monolithic reduction.  Finally
+closes the Tier-3 loop: the price-aware grid search (settlement revenue
+fed back into the (mu, rho) objective) picks different operating points
+than the price-blind one.
 """
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -26,7 +29,8 @@ import dataclasses
 import jax
 import numpy as np
 
-from repro.core import EngineConfig, engine_rollout
+from repro.core import (EngineConfig, chunk_summary, engine_rollout,
+                        engine_sweep, sweep_finalize)
 from repro.grid import build_scenario_batch, product_specs
 
 
@@ -58,6 +62,19 @@ def main():
         gap = float(np.max(np.abs(sharded["net_eur"] - out["net_eur"])))
         print(f"\nsharded over {len(jax.devices())} devices "
               f"(scenario axis, auto-padded): max |net_eur gap| = {gap:.4f}")
+
+    # fleet view: stream a larger grid in chunks (memory O(chunk));
+    # the summary_merge monoid reproduces the monolithic reduction
+    big = product_specs(countries=("SE", "DE", "PL", "FR"), seeds=range(4),
+                        horizon_h=2, products=("FFR",),
+                        reserve_rhos=(0.0, 0.2), event_seeds=(3,))
+    res = engine_sweep(cfg, big, chunk_size=8, mesh="auto")
+    mono = sweep_finalize(chunk_summary(cfg, engine_rollout(
+        cfg, build_scenario_batch(big)), build_scenario_batch(big)))
+    print(f"\nstreamed {res['n_scenarios']:.0f} scenarios "
+          f"({res['scenario_days']:.1f} scenario-days) in chunks of 8: "
+          f"net {res['net_eur']:.0f} EUR, compliance {res['compliance']:.3f}"
+          f" (monolithic gap {abs(res['net_eur'] - mono['net_eur']):.4f})")
 
     # Tier-3 loop closure: let the grid search choose rho, with and
     # without the settlement-revenue term

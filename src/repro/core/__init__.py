@@ -15,8 +15,9 @@ trainer-facing composition (controller).
 """
 from repro.core.controller import GridPilot, PowerPlan, plan_from_operating_point
 from repro.core.engine import (EngineConfig, EngineParams, EngineState,
-                               engine_init, engine_rollout, engine_step,
-                               summarize_rollout)
+                               chunk_summary, engine_init, engine_rollout,
+                               engine_step, engine_sweep, summarize_rollout,
+                               summary_init, summary_merge, sweep_finalize)
 from repro.core.plant import PlantState, init_plant, plant_step, power_model
 from repro.core.pid import (PIDState, init_pid, pid_step, pid_rollout,
                             pid_rollout_batch)
@@ -43,6 +44,9 @@ __all__ = [
     # unified rollout engine (the primary surface)
     "EngineConfig", "EngineParams", "EngineState",
     "engine_init", "engine_step", "engine_rollout", "summarize_rollout",
+    # streaming sweep executor (chunked rollouts, online aggregation)
+    "engine_sweep", "summary_init", "chunk_summary", "summary_merge",
+    "sweep_finalize",
     # trainer-facing composition
     "GridPilot", "PowerPlan", "plan_from_operating_point",
     # per-tier building blocks (internal entry points)

@@ -51,7 +51,7 @@ outputs are sliced back -- single-device numbers to fp32 tolerance.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import lru_cache, partial
+from functools import partial
 from typing import NamedTuple
 
 import jax
@@ -70,7 +70,7 @@ import repro.grid.markets as markets
 import repro.obs.telemetry as obs_tel
 import repro.workload.model as workload_lib
 from repro.grid.scenarios import ScenarioBatch, frequency_seeds, \
-    masked_quantile
+    masked_quantile, scenario_chunk
 
 
 @dataclass(frozen=True)
@@ -555,10 +555,16 @@ _SCENARIO_AXIS = "scenario"
 
 
 def _resolve_mesh(mesh):
-    """mesh= argument -> a validated Mesh with a "scenario" axis."""
-    if mesh == "auto":
-        from repro.launch.mesh import make_scenario_mesh
-        mesh = make_scenario_mesh()
+    """mesh= argument -> a validated Mesh with a "scenario" axis.
+
+    Strings ("auto" | "local" | "distributed") resolve through the single
+    mesh-resolution layer ``repro.launch.mesh.resolve_mesh``; "auto" picks
+    "distributed" when the ``REPRO_COORD_ADDR`` environment contract is
+    set, else a local-device mesh.
+    """
+    if isinstance(mesh, str):
+        from repro.launch.mesh import resolve_mesh
+        mesh = resolve_mesh(mesh)
     if _SCENARIO_AXIS not in mesh.axis_names:
         raise ValueError(
             f"engine mesh needs a {_SCENARIO_AXIS!r} axis, got mesh axes "
@@ -590,35 +596,74 @@ def unpad_scenario_axis(tree, n: int):
     return jax.tree.map(lambda x: x[:n], tree)
 
 
-@lru_cache(maxsize=None)
+def _mesh_cache_key(mesh) -> tuple:
+    """Identify a mesh by its device topology, not object identity.
+
+    ``Mesh.__eq__``/``__hash__`` are identity-based enough that two
+    equivalently-constructed meshes (same devices in the same layout,
+    same axis names) used to miss the cache -- recompiling the sweep --
+    while a dead Mesh object kept its compiled executable (and the device
+    buffers it pins) alive in the cache forever.  Keying on the device
+    ids + layout + axis names makes equivalent meshes share one entry.
+    """
+    return (tuple(int(d.id) for d in mesh.devices.flat),
+            tuple(mesh.axis_names), mesh.devices.shape)
+
+
+# compiled sharded programs, keyed on (kind, static config, mesh topology)
+_SHARDED_CACHE: dict = {}
+
+
+def sharded_cache_size() -> int:
+    """Number of compiled sharded programs currently cached (tests pin
+    that equivalent meshes do NOT grow this)."""
+    return len(_SHARDED_CACHE)
+
+
+def clear_sharded_cache() -> None:
+    _SHARDED_CACHE.clear()
+
+
 def _sharded_seconds_fn(cfg: EngineConfig, reduce: str, mesh,
                         has_loads: bool):
     """jit(shard_map(vmap(rollout))) over the scenario axis, cached per
-    (static config, mesh) so repeated sweeps reuse the compiled program.
+    (static config, mesh topology) so repeated sweeps -- including ones
+    that rebuild an equivalent mesh -- reuse the compiled program.
 
     Every input leaf and every output leaf carries a leading scenario
     axis and the per-scenario rollouts are independent (no collectives),
     so in/out specs are uniformly P("scenario"); each device runs the
     same fused scan over its N/n_dev slice of the batch.
+
+    ``has_loads`` is part of the key only: a None vs array loads arg
+    changes the traced arg pytree.
     """
-    del has_loads  # cache key only: the loads arg changes the arg pytree
-    spec = P(_SCENARIO_AXIS)
+    key = ("seconds", cfg, reduce, _mesh_cache_key(mesh), has_loads)
+    fn = _SHARDED_CACHE.get(key)
+    if fn is None:
+        spec = P(_SCENARIO_AXIS)
 
-    def run(batch, freq, base_loads, load_keys, scan_keys):
-        return _engine_seconds_vmapped(cfg, reduce, batch, freq, base_loads,
-                                       load_keys, scan_keys)
+        def run(batch, freq, base_loads, load_keys, scan_keys):
+            return _engine_seconds_vmapped(cfg, reduce, batch, freq,
+                                           base_loads, load_keys, scan_keys)
 
-    return jax.jit(shard_map(
-        run, mesh=mesh, in_specs=(spec, spec, spec, spec, spec),
-        out_specs=spec, check_rep=False))
+        fn = jax.jit(shard_map(
+            run, mesh=mesh, in_specs=(spec, spec, spec, spec, spec),
+            out_specs=spec, check_rep=False))
+        _SHARDED_CACHE[key] = fn
+    return fn
 
 
-@lru_cache(maxsize=None)
 def _sharded_hourly_fn(cfg: EngineConfig, mesh):
-    return jax.jit(shard_map(
-        partial(_engine_hourly_vmapped, cfg), mesh=mesh,
-        in_specs=(P(_SCENARIO_AXIS),), out_specs=P(_SCENARIO_AXIS),
-        check_rep=False))
+    key = ("hourly", cfg, _mesh_cache_key(mesh))
+    fn = _SHARDED_CACHE.get(key)
+    if fn is None:
+        fn = jax.jit(shard_map(
+            partial(_engine_hourly_vmapped, cfg), mesh=mesh,
+            in_specs=(P(_SCENARIO_AXIS),), out_specs=P(_SCENARIO_AXIS),
+            check_rep=False))
+        _SHARDED_CACHE[key] = fn
+    return fn
 
 
 # ---------------------------------------------------------------------------
@@ -690,7 +735,7 @@ def engine_rollout(cfg: EngineConfig, batch: ScenarioBatch, *,
     (N, e_max), so summary mode keeps its O(N*H + N*B) output bound.
 
     ``mesh`` shards the sweep over devices: pass a Mesh with a
-    ``"scenario"`` axis (see ``repro.launch.mesh.make_scenario_mesh``) or
+    ``"scenario"`` axis (see ``repro.launch.mesh.resolve_mesh``) or
     ``"auto"`` for a 1-D mesh over every local device.  The batch is
     right-padded to a multiple of the device count by replicating the
     last scenario, each device scans its slice via ``shard_map``, and the
@@ -730,6 +775,369 @@ def engine_rollout(cfg: EngineConfig, batch: ScenarioBatch, *,
                                 mesh.shape[_SCENARIO_AXIS])
     fn = _sharded_seconds_fn(cfg, reduce, mesh, loads is not None)
     return unpad_scenario_axis(fn(*args), n)
+
+
+# ---------------------------------------------------------------------------
+# Streaming sweep executor: chunked rollouts + online monoid aggregation
+# ---------------------------------------------------------------------------
+#
+# engine_rollout materialises its whole batch (and its whole output) at
+# once, which caps a sweep at what one host holds.  The streaming path
+# reduces each chunk's reduce="summary" output into a flat dict of
+# commutative-monoid accumulators (chunk_summary), folds chunks together
+# with summary_merge (suffix convention: keys ending "_max"/"_min" merge
+# by max/min, everything else by +), and converts the terminal aggregate
+# into fleet-level metrics host-side (sweep_finalize).  Because the
+# merge is commutative and associative, ANY chunking/ordering -- and any
+# split across devices (per-device aggregate lanes) or processes
+# (process_slice + out-of-band merge) -- reproduces the monolithic
+# numbers to fp32 reassociation tolerance.
+
+# extensive (pure-sum) aggregate keys shared by summary_init/chunk_summary
+_SWEEP_SCHED_SUMS = ("sched_it_mwh", "sched_fac_mwh", "sched_co2_t",
+                     "sched_co2_it_t", "sched_cfe_fac_mwh",
+                     "sched_tokens_mtok")
+_SWEEP_SECONDS_SUMS = ("it_mwh", "fac_mwh", "shed_it_mwh", "active_s",
+                       "capacity_eur", "penalty_eur", "net_eur",
+                       "n_events", "n_compliant", "tokens_mtok",
+                       "tokens_ckpt_mtok", "tokens_lost_mtok")
+
+
+def summary_init(cfg: EngineConfig) -> dict:
+    """The monoid identity: the aggregate of zero scenarios.
+
+    Every leaf is float32 (counts included) so the donated aggregate
+    buffer keeps one dtype across merges; extremes start at -/+inf and
+    :func:`sweep_finalize` maps never-observed extremes back to 0.
+    """
+    z = jnp.float32(0.0)
+    neg, pos = jnp.float32(-jnp.inf), jnp.float32(jnp.inf)
+    s = {k: z for k in ("n_scenarios", "hours", "mu_hours", "rho_hours",
+                        "cfe_mu_hours") + _SWEEP_SCHED_SUMS}
+    if not cfg.with_seconds:
+        return s
+    s.update({k: z for k in ("seconds", "warm_s", "ar4_err_s",
+                             "track_err_s", "chip_mean_s", "chip_p95_s",
+                             "thr_s", "committed_mw_hours",
+                             "n_compliant_sched", "ev_delivered_frac_sum",
+                             "ev_t_full_ms_sum", "ev_budget_ok",
+                             "ev_sustain_ok", "ev_delivered_ok")
+              + _SWEEP_SECONDS_SUMS})
+    s["ev_t_full_ms_max"] = neg
+    if cfg.telemetry:
+        s.update(
+            tel_track_hist=jnp.zeros(obs_tel.N_TRACK_BUCKETS, jnp.float32),
+            tel_resp_hist=jnp.zeros(obs_tel.N_RESP_BUCKETS, jnp.float32),
+            tel_rls2=z, tel_track2=z, tel_sat_s=z, tel_n_budget_ok=z,
+            tel_resp_ms_sum=z, tel_resp_n=z,
+            tel_resp_ms_max=neg, tel_slew_max=neg, tel_slew_min=pos)
+    return s
+
+
+def chunk_summary(cfg: EngineConfig, out: dict, batch: ScenarioBatch,
+                  lane=None) -> dict:
+    """Reduce one chunk's ``reduce="summary"`` rollout output into the
+    streaming aggregate dict (same keys as :func:`summary_init`).
+
+    Pure jnp on (N,)-leading leaves, so it runs inside the jitted sweep
+    step (and inside ``shard_map``, where N is the per-device slice).
+    ``lane`` is the (N,) validity mask: 0.0 marks lanes added by
+    ``pad_scenario_axis``, whose replicate-last-scenario padding is
+    numerically well-defined but must NOT leak into fleet sums -- an
+    unmasked merge double-counts the final real scenario.  Default: all
+    lanes valid (the monolithic-output case).
+
+    Intensive metrics are re-extensified with the same data-independent
+    weights the rollout normalised by (per-scenario valid seconds
+    ``hours*3600``, warm seconds ``hours*3600 - warmup_s``, valid hours),
+    so the monolithic normalisation inverts exactly and per-chunk merges
+    reproduce the monolithic summary to fp32 reassociation tolerance.
+    """
+    lane = (jnp.ones((batch.n,), jnp.float32) if lane is None
+            else jnp.asarray(lane, jnp.float32))
+    hours = jnp.asarray(batch.hours, jnp.float32)
+    hv = jnp.maximum(hours, 1.0)              # _hourly_one's hour count
+    s = dict(
+        n_scenarios=jnp.sum(lane),
+        hours=jnp.sum(lane * hours),
+        mu_hours=jnp.sum(lane * out["mean_mu"] * hv),
+        rho_hours=jnp.sum(lane * out["mean_rho"] * hv),
+        cfe_mu_hours=jnp.sum(lane * out["cfe_mu"]),
+    )
+    for k in _SWEEP_SCHED_SUMS:
+        s[k] = jnp.sum(lane * out[k])
+    if "it_mwh" not in out:                   # hourly-only rollout
+        return s
+    n_s = hours * 3600.0                      # per-scenario valid seconds
+    nc = jnp.maximum(n_s, 1.0)
+    nw = jnp.maximum(n_s - cfg.warmup_s, 1.0)  # seconds past RLS warm-up
+    s.update(
+        seconds=jnp.sum(lane * n_s),
+        warm_s=jnp.sum(lane * jnp.maximum(n_s - cfg.warmup_s, 0.0)),
+        ar4_err_s=jnp.sum(lane * out["ar4_mae_norm"] * nw),
+        track_err_s=jnp.sum(lane * out["tracking_err_mean"] * nw),
+        chip_mean_s=jnp.sum(lane * out["chip_power_mean"] * nc),
+        chip_p95_s=jnp.sum(lane * out["chip_power_p95"] * nc),
+        thr_s=jnp.sum(lane * out["thr_mean"] * nc),
+        committed_mw_hours=jnp.sum(lane * out["committed_mw"] * hv),
+    )
+    for k in _SWEEP_SECONDS_SUMS:
+        s[k] = jnp.sum(lane * out[k].astype(jnp.float32))
+    ev = out["events"]
+    evs = out["events_sched"]
+    vm = lane[:, None] * ev.valid.astype(jnp.float32)
+    s.update(
+        n_compliant_sched=jnp.sum(
+            lane[:, None] * (evs.valid & evs.compliant)),
+        ev_delivered_frac_sum=jnp.sum(vm * ev.delivered_frac),
+        ev_t_full_ms_sum=jnp.sum(vm * ev.t_full_ms),
+        ev_t_full_ms_max=jnp.max(
+            jnp.where(vm > 0, ev.t_full_ms, -jnp.inf)),
+        ev_budget_ok=jnp.sum(vm * ev.budget_ok),
+        ev_sustain_ok=jnp.sum(vm * ev.sustain_ok),
+        ev_delivered_ok=jnp.sum(vm * ev.delivered_ok),
+    )
+    if cfg.telemetry and "telemetry" in out:
+        s.update(obs_tel.sweep_summary(out["telemetry"], lane,
+                                       warmup_s=cfg.warmup_s))
+    return s
+
+
+def summary_merge(agg: dict, chunk: dict) -> dict:
+    """Fold one chunk aggregate into the running aggregate.
+
+    Commutative and associative by construction -- keys ending ``_max``
+    merge by maximum, ``_min`` by minimum, everything else by addition --
+    so chunking, chunk order, device lanes and process splits all
+    reassociate freely (fp32 sum reassociation is the only tolerance).
+    Pure (works on jnp tracers inside the jitted sweep step and on host
+    numpy when merging per-process aggregates out-of-band).
+    """
+    if agg.keys() != chunk.keys():
+        raise ValueError(
+            f"aggregate key mismatch: {sorted(agg)} vs {sorted(chunk)} "
+            "(merging summaries from different EngineConfig modes?)")
+    out = {}
+    for k, a in agg.items():
+        b = chunk[k]
+        if k.endswith("_max"):
+            out[k] = jnp.maximum(a, b)
+        elif k.endswith("_min"):
+            out[k] = jnp.minimum(a, b)
+        else:
+            out[k] = a + b
+    return out
+
+
+def _finite(x) -> float:
+    x = float(x)
+    return x if np.isfinite(x) else 0.0
+
+
+def sweep_finalize(agg: dict) -> dict:
+    """Terminal aggregate -> fleet-level metrics (host-side numpy).
+
+    Means are recovered from the carried (numerator, weight) pairs;
+    never-observed extremes (still at -/+inf from :func:`summary_init`)
+    report as 0.  Keys reuse the per-scenario summary names where the
+    fleet metric is the scenario-weighted mean of that quantity.
+    """
+    a = {k: np.asarray(v) for k, v in agg.items()}
+    hours = float(a["hours"])
+    hv = max(hours, 1.0)
+    out = dict(
+        n_scenarios=float(a["n_scenarios"]),
+        hours=hours,
+        scenario_days=hours / 24.0,
+        mean_mu=float(a["mu_hours"]) / hv,
+        mean_rho=float(a["rho_hours"]) / hv,
+        cfe_mu=float(a["cfe_mu_hours"]) / hv,
+    )
+    for k in _SWEEP_SCHED_SUMS:
+        out[k] = float(a[k])
+    if "seconds" not in a:
+        return out
+    sec = max(float(a["seconds"]), 1.0)
+    warm = max(float(a["warm_s"]), 1.0)
+    n_ev = max(float(a["n_events"]), 1.0)
+    out.update(
+        seconds=float(a["seconds"]),
+        ar4_mae_norm=float(a["ar4_err_s"]) / warm,
+        tracking_err_mean=float(a["track_err_s"]) / warm,
+        chip_power_mean=float(a["chip_mean_s"]) / sec,
+        chip_power_p95=float(a["chip_p95_s"]) / sec,
+        thr_mean=float(a["thr_s"]) / sec,
+        committed_mw=float(a["committed_mw_hours"]) / hv,
+        compliance=float(a["n_compliant"]) / n_ev,
+        compliance_sched=float(a["n_compliant_sched"]) / n_ev,
+        delivered_frac_mean=float(a["ev_delivered_frac_sum"]) / n_ev,
+        resp_ms_mean=float(a["ev_t_full_ms_sum"]) / n_ev,
+        resp_ms_max=_finite(a["ev_t_full_ms_max"]),
+        budget_ok_frac=float(a["ev_budget_ok"]) / n_ev,
+        sustain_ok_frac=float(a["ev_sustain_ok"]) / n_ev,
+        delivered_ok_frac=float(a["ev_delivered_ok"]) / n_ev,
+    )
+    for k in _SWEEP_SECONDS_SUMS:
+        out[k] = float(a[k])
+    if "tel_rls2" in a:
+        out["telemetry"] = dict(
+            track_hist=np.asarray(a["tel_track_hist"], np.float64),
+            resp_hist=np.asarray(a["tel_resp_hist"], np.float64),
+            rls_rms=float(np.sqrt(float(a["tel_rls2"]) / warm)),
+            track_rms=float(np.sqrt(float(a["tel_track2"]) / warm)),
+            sat_frac=float(a["tel_sat_s"]) / sec,
+            n_budget_ok=float(a["tel_n_budget_ok"]),
+            resp_ms_mean=(float(a["tel_resp_ms_sum"])
+                          / max(float(a["tel_resp_n"]), 1.0)),
+            resp_ms_max=_finite(a["tel_resp_ms_max"]),
+            slew_max=_finite(a["tel_slew_max"]),
+            slew_min=_finite(a["tel_slew_min"]),
+        )
+    return out
+
+
+def _sweep_body(cfg: EngineConfig, batch: ScenarioBatch, lane) -> dict:
+    """One chunk, traced: synthesise the chunk's frequency traces and
+    scenario keys IN-GRAPH (host never materialises them), run the fused
+    vmapped rollout, reduce to the aggregate dict.  Demand rows are
+    already generated in-scan from the counter-based PRNG, so peak input
+    memory is O(chunk * H_max)."""
+    if not cfg.with_seconds:
+        return chunk_summary(cfg, _engine_hourly_vmapped(cfg, batch),
+                             batch, lane)
+    T = int(batch.h_max) * 3600
+    freq, _ = frequency.synthesize_frequency_batch(
+        frequency_seeds(batch), batch.product_idx, n_seconds=T,
+        events_per_day=cfg.events_per_day, max_events=cfg.max_freq_events)
+    load_keys, scan_keys = _scenario_keys_jit(jnp.asarray(batch.seed))
+    out = _engine_seconds_vmapped(cfg, "summary", batch, freq, None,
+                                  load_keys, scan_keys)
+    return chunk_summary(cfg, out, batch, lane)
+
+
+@partial(jax.jit, static_argnames=("cfg",), donate_argnums=(1,))
+def _sweep_step_jit(cfg: EngineConfig, agg: dict, batch: ScenarioBatch,
+                    lane) -> dict:
+    """One streamed chunk folded into the donated aggregate: the
+    aggregate buffers are reused in place, so sweep memory is O(chunk)
+    regardless of how many chunks stream through."""
+    return summary_merge(agg, _sweep_body(cfg, batch, lane))
+
+
+def _sweep_step_sharded(cfg: EngineConfig, mesh):
+    """Sharded sweep step: per-DEVICE aggregate lanes, no collectives.
+
+    The aggregate carries a leading ``n_dev`` axis sharded over the
+    scenario mesh axis; inside ``shard_map`` each device strips its
+    (1, ...) block, folds its slice of the chunk into it, and restores
+    the lane axis.  Cross-device combination happens once, host-side, at
+    the end of the sweep (``summary_merge`` over the lanes) -- the
+    steady-state step stays collective-free.
+    """
+    key = ("sweep", cfg, _mesh_cache_key(mesh))
+    fn = _SHARDED_CACHE.get(key)
+    if fn is None:
+        spec = P(_SCENARIO_AXIS)
+
+        def run(agg, batch, lane):
+            local = jax.tree.map(lambda x: x[0], agg)
+            merged = summary_merge(local, _sweep_body(cfg, batch, lane))
+            return jax.tree.map(lambda x: x[None], merged)
+
+        fn = jax.jit(shard_map(
+            run, mesh=mesh, in_specs=(spec, spec, spec), out_specs=spec,
+            check_rep=False), donate_argnums=(0,))
+        _SHARDED_CACHE[key] = fn
+    return fn
+
+
+def _pad_chunk(batch: ScenarioBatch, pad_to: int):
+    """Pad a chunk to the fixed lane count (one compiled program for
+    every chunk, including the final partial one) and return the lane
+    validity mask that keeps the replicated padding out of the sums."""
+    n = batch.n
+    if n > pad_to:
+        raise ValueError(f"chunk of {n} scenarios exceeds lane count "
+                         f"{pad_to}")
+    lane = (jnp.arange(pad_to) < n).astype(jnp.float32)
+    if n == pad_to:
+        return batch, lane
+    padded, _ = pad_scenario_axis(batch, pad_to)
+    return padded, lane
+
+
+def engine_sweep(cfg: EngineConfig, specs, *, chunk_size: int, mesh=None,
+                 h_max: int | None = None, finalize: bool = True,
+                 progress=None) -> dict:
+    """Stream an arbitrarily large scenario sweep through chunk-shaped
+    rollouts with online aggregation: memory is O(chunk_size), not
+    O(len(specs)).
+
+    ``specs`` is any random-access sequence of ScenarioSpec; each chunk's
+    traces are synthesised only when its chunk is built
+    (``scenario_chunk``), every chunk is padded to one fixed lane count
+    (``chunk_size`` rounded up to the mesh's device count) so the whole
+    sweep is ONE compiled program, and each step folds its chunk into
+    donated aggregate buffers via the :func:`summary_merge` monoid.
+
+    ``mesh`` shards each chunk over a ``"scenario"`` mesh axis ("auto" /
+    "local" / "distributed" resolve through ``launch.mesh.resolve_mesh``)
+    with per-device aggregate lanes, combined host-side once at the end.
+    In a multi-process launch (the ``REPRO_COORD_ADDR`` env contract)
+    every process calls this with the SAME ``specs`` and sweeps only its
+    ``process_slice`` of the index range -- no host ever materialises
+    the global batch; with ``finalize=False`` the raw per-process
+    aggregate comes back for out-of-band merging.
+
+    ``h_max`` pins the padded hour axis (default: the global longest
+    horizon -- computed from specs without building any batch).
+    ``progress(chunks_done, n_chunks)`` is called after each folded
+    chunk.  Returns :func:`sweep_finalize` metrics, or the raw aggregate
+    dict when ``finalize=False``.
+    """
+    from repro.launch import mesh as mesh_lib
+    if chunk_size < 1:
+        raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
+    if len(specs) == 0:
+        raise ValueError("empty scenario list")
+    mesh_lib.ensure_distributed()
+    n_dev = None
+    if mesh is not None:
+        mesh = _resolve_mesh(mesh)
+        n_dev = mesh.shape[_SCENARIO_AXIS]
+    if h_max is None:
+        h_max = max(s.horizon_h for s in specs)
+    lo0, hi0 = mesh_lib.process_slice(len(specs))
+    pad_to = (chunk_size if n_dev is None
+              else -(-chunk_size // n_dev) * n_dev)
+    # .copy() forces one distinct device buffer per leaf: jax caches
+    # equal scalar constants, and donating an aliased buffer twice in
+    # one step is an error
+    agg = jax.tree.map(lambda x: jnp.asarray(x).copy(), summary_init(cfg))
+    if mesh is not None:
+        # materialised per-device lanes (donation needs real buffers)
+        agg = jax.tree.map(
+            lambda x: jnp.tile(x[None], (n_dev,) + (1,) * x.ndim), agg)
+        step = _sweep_step_sharded(cfg, mesh)
+    starts = range(lo0, hi0, chunk_size)
+    for i, lo in enumerate(starts):
+        batch, lane = _pad_chunk(
+            scenario_chunk(specs, lo, min(lo + chunk_size, hi0),
+                           h_max=h_max), pad_to)
+        if mesh is None:
+            agg = _sweep_step_jit(cfg, agg, batch, lane)
+        else:
+            agg = step(agg, batch, lane)
+        if progress is not None:
+            progress(i + 1, len(starts))
+    host = jax.tree.map(np.asarray, agg)
+    if mesh is not None:
+        merged = jax.tree.map(lambda x: x[0], host)
+        for d in range(1, n_dev):
+            merged = summary_merge(
+                merged, jax.tree.map(lambda x, d=d: x[d], host))
+        host = jax.tree.map(np.asarray, merged)
+    return sweep_finalize(host) if finalize else host
 
 
 def summarize_rollout(cfg: EngineConfig, batch: ScenarioBatch,

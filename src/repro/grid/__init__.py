@@ -19,6 +19,7 @@ from repro.grid.scenarios import (
     build_scenario_batch,
     masked_quantile,
     product_specs,
+    scenario_chunk,
 )
 
 __all__ = [
@@ -40,4 +41,5 @@ __all__ = [
     "build_scenario_batch",
     "masked_quantile",
     "product_specs",
+    "scenario_chunk",
 ]

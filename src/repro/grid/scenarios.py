@@ -132,7 +132,8 @@ class ScenarioBatch:
         )
 
 
-def build_scenario_batch(specs: Sequence[ScenarioSpec]) -> ScenarioBatch:
+def build_scenario_batch(specs: Sequence[ScenarioSpec],
+                         h_max: int | None = None) -> ScenarioBatch:
     """Synthesize every spec's traces and stack them into one padded batch.
 
     Scenarios that differ only in (mw, pue_design, product, reserve_rho,
@@ -141,10 +142,21 @@ def build_scenario_batch(specs: Sequence[ScenarioSpec]) -> ScenarioBatch:
     ambient traces, so synthesis runs once per distinct trace key -- on
     the usual Cartesian product grids this cuts the builder's host-side
     work by the size of the non-trace axes.
+
+    ``h_max`` overrides the padded hour axis (defaults to the longest
+    horizon in ``specs``).  Streaming sweeps pass the *global* maximum so
+    every chunk stacks to one shape (one compiled program); it must cover
+    the longest horizon present.
     """
     if not specs:
         raise ValueError("empty scenario list")
-    h_max = max(s.horizon_h for s in specs)
+    h_need = max(s.horizon_h for s in specs)
+    if h_max is None:
+        h_max = h_need
+    elif h_max < h_need:
+        raise ValueError(
+            f"h_max={h_max} is shorter than the longest horizon in the "
+            f"spec slice ({h_need} h)")
     n = len(specs)
     ci = np.zeros((n, h_max), np.float32)
     t_amb = np.full((n, h_max), _PAD_T_AMB, np.float32)
@@ -177,6 +189,28 @@ def build_scenario_batch(specs: Sequence[ScenarioSpec]) -> ScenarioBatch:
         mix_idx=jnp.asarray(
             [mix_index(s.workload_mix) for s in specs], jnp.int32),
     )
+
+
+def scenario_chunk(specs: Sequence[ScenarioSpec], lo: int, hi: int, *,
+                   h_max: int | None = None) -> ScenarioBatch:
+    """Index-addressed chunk builder: stack specs ``[lo, hi)`` only.
+
+    The streaming executor's batch source (``engine.engine_sweep``): each
+    call synthesises and materialises ONLY its chunk's traces, so a sweep
+    over millions of scenario-days -- and each process of a multi-host
+    run -- never holds more than O(chunk) host or device memory; no host
+    ever builds the global batch.  ``h_max`` pins the padded hour axis so
+    every chunk of a sweep stacks to the same shape (one compiled
+    program); it defaults to the chunk's own longest horizon.
+
+    ``specs`` may be any random-access sequence; only ``[lo, hi)`` is
+    touched.  Trace-synthesis dedup is chunk-local (scenarios sharing a
+    trace key inside the chunk synthesise once).
+    """
+    if not (0 <= lo < hi <= len(specs)):
+        raise ValueError(
+            f"chunk [{lo}, {hi}) out of range for {len(specs)} specs")
+    return build_scenario_batch(specs[lo:hi], h_max=h_max)
 
 
 def frequency_seeds(batch: ScenarioBatch) -> jax.Array:

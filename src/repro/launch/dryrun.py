@@ -33,7 +33,7 @@ import jax
 import numpy as np
 
 from repro.configs import SHAPES, dryrun_cells, get_arch
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import pod_mesh
 from repro.train.step import build_step_bundle
 
 OUT_DIR = "benchmarks/out"
@@ -144,9 +144,9 @@ def main(argv=None) -> int:
 
     meshes = []
     if args.mesh in ("single", "both"):
-        meshes.append(("single", make_production_mesh(multi_pod=False)))
+        meshes.append(("single", pod_mesh(multi_pod=False)))
     if args.mesh in ("multi", "both"):
-        meshes.append(("multi", make_production_mesh(multi_pod=True)))
+        meshes.append(("multi", pod_mesh(multi_pod=True)))
 
     import os as _os
     _os.makedirs(OUT_DIR, exist_ok=True)

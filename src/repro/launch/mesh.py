@@ -1,30 +1,182 @@
-"""Production meshes.  Functions only -- importing this module never
-touches jax device state (the dry-run sets XLA_FLAGS before any init)."""
+"""Mesh resolution: ONE layer turning "where should this sweep run" into
+a Mesh, for single-process, simulated-multi-device and multi-host runs.
+
+Importing this module never touches jax device state (the dry-run sets
+XLA_FLAGS before any init); device queries happen inside the resolver
+functions only.
+
+:func:`resolve_mesh` is the single entry point -- the engine's
+``mesh="auto"`` path and every benchmark/test resolve through it:
+
+  ``"local"``        1-D ``("scenario",)`` mesh over this process's
+                     devices (CI simulates 8 with
+                     ``XLA_FLAGS=--xla_force_host_platform_device_count=8``),
+  ``"distributed"``  initialise ``jax.distributed`` from the
+                     ``REPRO_COORD_ADDR`` / ``REPRO_NUM_PROCESSES`` /
+                     ``REPRO_PROCESS_ID`` environment and return the
+                     scenario mesh this process computes on,
+  ``"auto"``         ``"distributed"`` when the env vars are set, else
+                     ``"local"``,
+  a ``Mesh``         validated and returned as-is.
+
+Multi-host note: on TPU/GPU backends the distributed mesh spans every
+process's devices (one SPMD program over the global scenario axis).  The
+CPU backend cannot run one computation across processes (XLA:CPU has no
+multi-process runtime), so there ``resolve_mesh("distributed")`` returns
+the *process-local* slice of the global mesh and the scenario axis is
+instead partitioned across processes host-side: each process sweeps its
+:func:`process_slice` of the scenario index range and the per-process
+aggregates combine through the ``engine.summary_merge`` monoid (order
+never matters).  Either way no host ever materialises the global batch.
+"""
 from __future__ import annotations
 
+import os
+import warnings
+
 import jax
+import numpy as np
+from jax.sharding import Mesh
+
+SCENARIO_AXIS = "scenario"
+
+# environment contract for multi-process runs (set per process by the
+# launcher; see benchmarks/engine_fleet.py --distributed-smoke)
+COORD_ADDR_ENV = "REPRO_COORD_ADDR"
+NUM_PROCESSES_ENV = "REPRO_NUM_PROCESSES"
+PROCESS_ID_ENV = "REPRO_PROCESS_ID"
+
+_DIST_INITIALIZED = False
 
 
-def make_production_mesh(*, multi_pod: bool = False):
-    """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
+def distributed_env() -> tuple[str, int, int] | None:
+    """(coordinator address, process count, process id) from the env, or
+    None when this is not a multi-process launch.  Process count and id
+    must come together with the address; a partial set is an error, not a
+    silent single-process fallback."""
+    addr = os.environ.get(COORD_ADDR_ENV)
+    if addr is None:
+        return None
+    try:
+        n = int(os.environ[NUM_PROCESSES_ENV])
+        pid = int(os.environ[PROCESS_ID_ENV])
+    except KeyError as e:
+        raise RuntimeError(
+            f"{COORD_ADDR_ENV} is set but {e.args[0]} is not: a "
+            "multi-process launch needs all three of "
+            f"{COORD_ADDR_ENV}/{NUM_PROCESSES_ENV}/{PROCESS_ID_ENV}") from e
+    if not (0 <= pid < n):
+        raise RuntimeError(
+            f"{PROCESS_ID_ENV}={pid} out of range for "
+            f"{NUM_PROCESSES_ENV}={n}")
+    return addr, n, pid
+
+
+def ensure_distributed() -> bool:
+    """Initialise ``jax.distributed`` from the environment, once.
+
+    Returns True when this process is part of a multi-process run (after
+    initialisation), False for a plain single-process launch.  Safe to
+    call repeatedly; the first call blocks until every process reaches
+    the coordinator.
+    """
+    global _DIST_INITIALIZED
+    env = distributed_env()
+    if env is None:
+        return False
+    if not _DIST_INITIALIZED:
+        addr, n, pid = env
+        jax.distributed.initialize(coordinator_address=addr,
+                                   num_processes=n, process_id=pid)
+        _DIST_INITIALIZED = True
+    return True
+
+
+def process_slice(n_total: int) -> tuple[int, int]:
+    """This process's contiguous ``[lo, hi)`` slice of a global scenario
+    index range, balanced to within one element across processes.  The
+    identity slice in single-process runs."""
+    n_proc = jax.process_count()
+    pid = jax.process_index()
+    base, rem = divmod(n_total, n_proc)
+    lo = pid * base + min(pid, rem)
+    return lo, lo + base + (1 if pid < rem else 0)
+
+
+def _scenario_mesh(devices) -> Mesh:
+    return Mesh(np.asarray(devices), (SCENARIO_AXIS,))
+
+
+def resolve_mesh(kind="auto", *, n_devices: int | None = None) -> Mesh:
+    """Resolve ``kind`` into a scenario mesh (see the module docstring).
+
+    ``n_devices`` caps the local device count (only meaningful for
+    ``"local"``; tests use it to build small meshes on a big simulated
+    device set).
+    """
+    if isinstance(kind, Mesh):
+        return kind
+    if kind == "auto":
+        kind = "distributed" if distributed_env() is not None else "local"
+    if kind == "distributed":
+        if not ensure_distributed():
+            raise RuntimeError(
+                f"resolve_mesh('distributed') needs {COORD_ADDR_ENV}/"
+                f"{NUM_PROCESSES_ENV}/{PROCESS_ID_ENV} in the environment")
+        devices = jax.devices()
+        if devices and devices[0].platform == "cpu":
+            # XLA:CPU cannot run one program across processes; compute on
+            # the local slice of the global mesh (the scenario range is
+            # partitioned host-side via process_slice instead)
+            devices = jax.local_devices()
+        return _scenario_mesh(devices)
+    if kind == "local":
+        devices = jax.local_devices()
+        if n_devices is not None:
+            devices = devices[:n_devices]
+        return _scenario_mesh(devices)
+    raise ValueError(
+        f"resolve_mesh kind must be 'auto', 'local', 'distributed' or a "
+        f"Mesh, got {kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# Deprecated shims (the pre-resolve_mesh surface) + non-scenario topologies
+# ---------------------------------------------------------------------------
+
+
+def pod_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips): the
+    production training topology used by the dry-run/roofline sizers."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)
 
 
-def make_scenario_mesh(n_devices: int | None = None):
-    """1-D mesh over a "scenario" axis: the engine sweep's data-parallel
-    layout (each device scans its slice of the scenario batch).  Defaults
-    to every local device; CI simulates 8 with
-    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``."""
-    n = len(jax.devices()) if n_devices is None else n_devices
-    return jax.make_mesh((n,), ("scenario",))
+def make_scenario_mesh(n_devices: int | None = None) -> Mesh:
+    """Deprecated: use ``resolve_mesh("local", n_devices=...)`` (or
+    ``"auto"``, which also covers multi-process launches)."""
+    warnings.warn(
+        "make_scenario_mesh is deprecated; use "
+        "repro.launch.mesh.resolve_mesh('local'|'auto'|'distributed')",
+        DeprecationWarning, stacklevel=2)
+    return resolve_mesh("local", n_devices=n_devices)
 
 
-def make_local_mesh():
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """Deprecated alias of :func:`pod_mesh` (kept for external callers of
+    the pre-resolve_mesh surface)."""
+    warnings.warn(
+        "make_production_mesh is deprecated; use "
+        "repro.launch.mesh.pod_mesh(multi_pod=...)",
+        DeprecationWarning, stacklevel=2)
+    return pod_mesh(multi_pod=multi_pod)
+
+
+def make_local_mesh() -> Mesh:
     """Whatever this process has (1 CPU device in the container): used by
     smoke tests, examples and the trainer."""
-    n = len(jax.devices())
+    n = len(jax.local_devices())
     if n >= 4:
         return jax.make_mesh((n // 2, 2), ("data", "model"))
     return jax.make_mesh((n, 1), ("data", "model"))

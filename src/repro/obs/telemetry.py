@@ -79,6 +79,59 @@ CAP_SAT_TOL_W = 1e-3
 HOUR_S = 3600
 
 
+def sweep_summary(tel: dict, lane, *, warmup_s: int) -> dict:
+    """Reduce a batched :func:`finalize` output (leaves carrying a leading
+    scenario axis) into commutative-monoid telemetry accumulators for the
+    streaming sweep executor (``engine.summary_merge``).
+
+    ``lane`` is the (N,) lane-validity mask -- 0.0 on padded lanes, which
+    must not leak into fleet sums (`pad_scenario_axis` replicates the
+    last REAL scenario into padding, so an unmasked merge double-counts).
+
+    Keys ending in ``_max``/``_min`` merge by max/min, everything else by
+    sum (the ``summary_merge`` convention):
+
+      * ``tel_track_hist`` / ``tel_resp_hist``: fleet histograms (bucket
+        counts sum exactly across any chunking),
+      * ``tel_rls2`` / ``tel_track2``: squared-error sums (RLS in
+        per-design-host units, as ``rls_rms_h`` reports them) recovered
+        from the per-hour RMS moments (finalize normalises per hour by
+        the data-independent warm-second count, so the numerators invert
+        exactly) -- fleet RMS = sqrt(sum / warm seconds),
+      * ``tel_sat_s``: cap-saturated chip-seconds,
+      * ``tel_resp_*``: trigger-to-target sums/extremes over valid
+        events, ``tel_slew_max``/``tel_slew_min``: ramp extremes.
+    """
+    lane = jnp.asarray(lane, jnp.float32)
+    lane_c = lane[:, None]
+    hour_n = tel["hour_n"]                                   # (N, B)
+    B = hour_n.shape[-1]
+    first = (jnp.arange(B) == 0).astype(jnp.float32)
+    # per-hour warm-second counts: data-independent (finalize recomputes
+    # them the same way), so the RMS normalisation inverts exactly
+    w_h = jnp.maximum(hour_n - jnp.float32(warmup_s) * first, 0.0)
+    nw_h = jnp.maximum(w_h, 1.0)
+    rls2_h = jnp.square(tel["rls_rms_h"]) * nw_h
+    track2_h = jnp.square(tel["track_rms_h"]) * nw_h
+    sat_h = tel["sat_frac_h"] * jnp.maximum(hour_n, 1.0)
+    has_hour = (lane_c * hour_n) > 0
+    neg, pos = jnp.float32(-jnp.inf), jnp.float32(jnp.inf)
+    vf = tel["resp_valid"].astype(jnp.float32) * lane_c
+    return dict(
+        tel_track_hist=jnp.sum(lane_c * tel["track_hist"], axis=0),
+        tel_resp_hist=jnp.sum(lane_c * tel["resp_hist"], axis=0),
+        tel_rls2=jnp.sum(lane_c * rls2_h),
+        tel_track2=jnp.sum(lane_c * track2_h),
+        tel_sat_s=jnp.sum(lane_c * sat_h),
+        tel_n_budget_ok=jnp.sum(lane * tel["n_budget_ok"]),
+        tel_resp_ms_sum=jnp.sum(vf * tel["resp_ms"]),
+        tel_resp_n=jnp.sum(vf),
+        tel_resp_ms_max=jnp.max(jnp.where(vf > 0, tel["resp_ms"], neg)),
+        tel_slew_max=jnp.max(jnp.where(has_hour, tel["slew_max_h"], neg)),
+        tel_slew_min=jnp.min(jnp.where(has_hour, tel["slew_min_h"], pos)),
+    )
+
+
 class TickAccum(NamedTuple):
     """Per-hour telemetry sums, carried through the inner (per-hour)
     scan and emitted as outer ys at each hour boundary.  Everything here

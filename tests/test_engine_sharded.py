@@ -14,7 +14,7 @@ import pytest
 
 import repro.core.engine as eng
 from repro.grid.scenarios import build_scenario_batch, product_specs
-from repro.launch.mesh import make_scenario_mesh
+from repro.launch.mesh import resolve_mesh
 
 N_DEV = len(jax.devices())
 multi_device = pytest.mark.skipif(
@@ -38,6 +38,30 @@ def test_mesh_requires_scenario_axis():
     mesh = jax.make_mesh((1,), ("data",))
     with pytest.raises(ValueError, match="scenario"):
         eng.engine_rollout(CFG, _batch(1), mesh=mesh)
+
+
+def test_sharded_cache_keyed_on_topology():
+    """Equivalent meshes -- same devices, layout and axis names, however
+    constructed -- must hit ONE cache entry: the old lru_cache keyed on
+    the Mesh object itself, so a rebuilt mesh recompiled the sweep and a
+    dead mesh pinned its compiled program forever."""
+    from jax.sharding import Mesh
+    cfg = dataclasses.replace(CFG, with_seconds=False)
+    batch = _batch(1)
+    mesh_a = resolve_mesh("local", n_devices=1)
+    eng.engine_rollout(cfg, batch, mesh=mesh_a)
+    n0 = eng.sharded_cache_size()
+    # equivalent mesh built through a different constructor path
+    mesh_b = Mesh(np.asarray(jax.local_devices()[:1]), ("scenario",))
+    assert eng._mesh_cache_key(mesh_a) == eng._mesh_cache_key(mesh_b)
+    eng.engine_rollout(cfg, batch, mesh=mesh_b)
+    eng.engine_rollout(cfg, batch, mesh=resolve_mesh("local", n_devices=1))
+    assert eng.sharded_cache_size() == n0
+    # a genuinely different topology is a different entry
+    if N_DEV >= 2:
+        eng.engine_rollout(cfg, batch, mesh=resolve_mesh("local",
+                                                         n_devices=2))
+        assert eng.sharded_cache_size() == n0 + 1
 
 
 def test_pad_scenario_axis_replicates_last_row():
@@ -86,7 +110,7 @@ def test_sharded_seconds_matches_unsharded():
 @multi_device
 def test_sharded_accepts_explicit_mesh_and_loads():
     batch = _batch(2)
-    mesh = make_scenario_mesh(2)
+    mesh = resolve_mesh("local", n_devices=2)
     loads = eng.base_loads(CFG, batch)
     ref = jax.tree.map(np.asarray,
                        eng.engine_rollout(CFG, batch, loads=loads))

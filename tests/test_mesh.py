@@ -1,0 +1,141 @@
+"""Mesh-resolution layer: resolve_mesh, the multi-process env contract
+and the host-side scenario partitioning it drives."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.launch import mesh as mesh_lib
+
+N_DEV = len(jax.local_devices())
+
+
+# -- process_slice -----------------------------------------------------------
+
+
+def test_process_slice_is_identity_single_process():
+    assert mesh_lib.process_slice(7) == (0, 7)
+    assert mesh_lib.process_slice(0) == (0, 0)
+
+
+@pytest.mark.parametrize("n_total,n_proc", [(10, 3), (7, 2), (5, 5),
+                                            (3, 4), (100, 7)])
+def test_process_slice_partitions_exactly(monkeypatch, n_total, n_proc):
+    """Slices tile [0, n_total) exactly, balanced to within one element,
+    for every process id -- including more processes than work."""
+    slices = []
+    for pid in range(n_proc):
+        monkeypatch.setattr(jax, "process_count", lambda: n_proc)
+        monkeypatch.setattr(jax, "process_index", lambda p=pid: p)
+        slices.append(mesh_lib.process_slice(n_total))
+    assert slices[0][0] == 0 and slices[-1][1] == n_total
+    sizes = [hi - lo for lo, hi in slices]
+    assert sum(sizes) == n_total
+    assert max(sizes) - min(sizes) <= 1
+    for (_, hi), (lo, _) in zip(slices, slices[1:]):
+        assert hi == lo                      # contiguous, no gaps/overlap
+
+
+# -- distributed env contract ------------------------------------------------
+
+
+def _set_env(monkeypatch, addr=None, n=None, pid=None):
+    for var, val in ((mesh_lib.COORD_ADDR_ENV, addr),
+                     (mesh_lib.NUM_PROCESSES_ENV, n),
+                     (mesh_lib.PROCESS_ID_ENV, pid)):
+        if val is None:
+            monkeypatch.delenv(var, raising=False)
+        else:
+            monkeypatch.setenv(var, str(val))
+
+
+def test_distributed_env_absent(monkeypatch):
+    _set_env(monkeypatch)
+    assert mesh_lib.distributed_env() is None
+
+
+def test_distributed_env_complete(monkeypatch):
+    _set_env(monkeypatch, "127.0.0.1:1234", 2, 1)
+    assert mesh_lib.distributed_env() == ("127.0.0.1:1234", 2, 1)
+
+
+def test_distributed_env_partial_is_an_error(monkeypatch):
+    """Address without count/id must fail loudly, not silently fall back
+    to a single-process sweep of the full scenario range."""
+    _set_env(monkeypatch, addr="127.0.0.1:1234")
+    with pytest.raises(RuntimeError, match=mesh_lib.NUM_PROCESSES_ENV):
+        mesh_lib.distributed_env()
+    _set_env(monkeypatch, addr="127.0.0.1:1234", n=2)
+    with pytest.raises(RuntimeError, match=mesh_lib.PROCESS_ID_ENV):
+        mesh_lib.distributed_env()
+
+
+def test_distributed_env_pid_out_of_range(monkeypatch):
+    _set_env(monkeypatch, "127.0.0.1:1234", 2, 2)
+    with pytest.raises(RuntimeError, match="out of range"):
+        mesh_lib.distributed_env()
+
+
+def test_ensure_distributed_noop_without_env(monkeypatch):
+    _set_env(monkeypatch)
+    assert mesh_lib.ensure_distributed() is False
+
+
+# -- resolve_mesh ------------------------------------------------------------
+
+
+def test_resolve_local_scenario_mesh():
+    mesh = mesh_lib.resolve_mesh("local")
+    assert mesh.axis_names == (mesh_lib.SCENARIO_AXIS,)
+    assert mesh.devices.ndim == 1 and mesh.devices.size == N_DEV
+
+
+def test_resolve_local_caps_device_count():
+    mesh = mesh_lib.resolve_mesh("local", n_devices=1)
+    assert mesh.devices.size == 1
+
+
+def test_resolve_mesh_passthrough():
+    mesh = Mesh(np.asarray(jax.local_devices()[:1]), ("scenario",))
+    assert mesh_lib.resolve_mesh(mesh) is mesh
+
+
+def test_resolve_auto_is_local_without_env(monkeypatch):
+    _set_env(monkeypatch)
+    mesh = mesh_lib.resolve_mesh("auto")
+    assert mesh.axis_names == (mesh_lib.SCENARIO_AXIS,)
+
+
+def test_resolve_distributed_requires_env(monkeypatch):
+    _set_env(monkeypatch)
+    with pytest.raises(RuntimeError, match=mesh_lib.COORD_ADDR_ENV):
+        mesh_lib.resolve_mesh("distributed")
+
+
+def test_resolve_mesh_rejects_unknown_kind():
+    with pytest.raises(ValueError, match="kind"):
+        mesh_lib.resolve_mesh("cluster")
+
+
+# -- deprecated shims --------------------------------------------------------
+
+
+def test_make_scenario_mesh_shim_warns_and_delegates():
+    with pytest.deprecated_call(match="resolve_mesh"):
+        mesh = mesh_lib.make_scenario_mesh(1)
+    assert mesh.axis_names == (mesh_lib.SCENARIO_AXIS,)
+    assert mesh.devices.size == 1
+
+
+def test_make_production_mesh_shim_warns_and_delegates():
+    # the pod topology needs 256 devices; on smaller hosts the warning
+    # must still fire before the delegated pod_mesh sizing error
+    if N_DEV >= 256:
+        with pytest.deprecated_call(match="pod_mesh"):
+            mesh = mesh_lib.make_production_mesh()
+        assert mesh.devices.shape == (16, 16)
+        assert mesh.axis_names == ("data", "model")
+    else:
+        with pytest.deprecated_call(match="pod_mesh"), \
+                pytest.raises(ValueError, match="devices"):
+            mesh_lib.make_production_mesh()
