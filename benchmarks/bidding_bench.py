@@ -1,0 +1,127 @@
+"""Differentiable bidding vs the Tier-3 grid search, settled end-to-end.
+
+Three arms on the fast E9 slice, all settled by the SAME unified engine
+(``engine_rollout``), so the only difference between them is who chose
+the hourly (mu, rho) trajectory:
+
+  * ``grid_blind``  -- the price-blind Tier-3 grid search (w_rev = 0),
+  * ``grid``        -- the price-aware grid search (the strongest
+                       in-engine baseline: settlement revenue already
+                       feeds J(mu, rho)),
+  * ``bid``         -- ``repro.optim.bidding``: gradient ascent on the
+                       smooth surrogate + a CEM cloud under the hard
+                       objective, over a forecast ensemble per hour,
+                       committed to the engine via the ``ops=`` override
+                       (the engine settles the *shaded* capacity bid).
+
+Gates (imported by ``benchmarks.check_trajectory`` -- one source of
+truth with the in-bench asserts):
+
+  * the bid arm's settlement net must beat the price-aware grid arm by
+    at least ``BIDDING_MIN_NET_EUR_GAIN`` on the same realised traces,
+  * at comparable compile+run cost: first-call (trace+compile+run)
+    wall-clock of the bid arm within ``BIDDING_MAX_TIME_RATIO`` x the
+    grid arm's, and steady-state within ``BIDDING_MAX_RUN_RATIO`` x
+    (the optimiser re-runs per call; only its compile is amortised).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+import repro.core.engine as engine_lib
+from benchmarks.common import emit, measure, save_json
+from benchmarks.e9_reserve import build_e9_batch, engine_config
+from repro.optim import bidding
+
+# settlement net (EUR, summed over the slice) the bid arm must clear
+# OVER the price-aware grid baseline on identical realised traces
+BIDDING_MIN_NET_EUR_GAIN = 0.0
+# first-call wall ratio bid/grid: the optimiser's one-off trace+compile
+# (~2.4x measured on the fast slice) on top of the shared engine compile
+BIDDING_MAX_TIME_RATIO = 3.0
+# steady-state wall ratio bid/grid: re-optimise + rollout vs rollout
+BIDDING_MAX_RUN_RATIO = 2.0
+
+BID_CFG = bidding.BidConfig()   # the default production profile
+
+
+def run(fast: bool = True) -> dict:
+    specs, batch = build_e9_batch(fast)
+    cfg = engine_config(fast, rho_mode="tier3", price_aware=True)
+    cfg_blind = engine_config(fast, rho_mode="tier3")
+    sync = jax.block_until_ready
+
+    emit("bidding.n_scenarios", batch.n,
+         "bid vs grid Tier-3, settled by the same fused engine")
+    emit("bidding.n_ens", BID_CFG.n_ens, "forecast ensemble members/hour")
+    emit("bidding.n_iter", BID_CFG.n_iter, "optimiser iterations")
+
+    out_blind, _, _ = measure(
+        "bidding.grid_blind",
+        lambda: engine_lib.engine_rollout(cfg_blind, batch), sync=sync)
+    out_grid, grid_first, grid_run = measure(
+        "bidding.grid",
+        lambda: engine_lib.engine_rollout(cfg, batch), sync=sync)
+
+    def bid_arm():
+        ops = bidding.bids_for_batch(cfg, batch, config=BID_CFG)
+        return engine_lib.engine_rollout(cfg, batch, ops=ops)
+
+    out_bid, bid_first, bid_run = measure("bidding.bid", bid_arm, sync=sync)
+
+    nets = {tag: float(np.sum(np.asarray(o["net_eur"])))
+            for tag, o in (("grid_blind", out_blind), ("grid", out_grid),
+                           ("bid", out_bid))}
+    pens = {tag: float(np.sum(np.asarray(o["penalty_eur"])))
+            for tag, o in (("grid_blind", out_blind), ("grid", out_grid),
+                           ("bid", out_bid))}
+    for tag in ("grid_blind", "grid", "bid"):
+        emit(f"bidding.{tag}.net_eur", round(nets[tag], 1),
+             "settlement net over the slice")
+        emit(f"bidding.{tag}.penalty_eur", round(pens[tag], 1),
+             "clawback paid over the slice")
+
+    gain = nets["bid"] - nets["grid"]
+    gain_blind = nets["bid"] - nets["grid_blind"]
+    emit("bidding.net_eur_gain", round(gain, 1),
+         f"bid - price-aware grid (floor >= {BIDDING_MIN_NET_EUR_GAIN})")
+    emit("bidding.net_eur_gain_vs_blind", round(gain_blind, 1),
+         "bid - price-blind grid (context)")
+
+    time_ratio = bid_first / max(grid_first, 1e-9)
+    run_ratio = bid_run / max(grid_run, 1e-9)
+    emit("bidding.time_ratio_x", round(time_ratio, 3),
+         f"first-call wall bid/grid (ceiling {BIDDING_MAX_TIME_RATIO})")
+    emit("bidding.run_ratio_x", round(run_ratio, 3),
+         f"steady-state wall bid/grid (ceiling {BIDDING_MAX_RUN_RATIO})")
+
+    assert gain >= BIDDING_MIN_NET_EUR_GAIN, (
+        f"bid arm nets {nets['bid']:.1f} EUR vs price-aware grid "
+        f"{nets['grid']:.1f}: gain {gain:.1f} under the "
+        f"{BIDDING_MIN_NET_EUR_GAIN} floor (acceptance gate)")
+    assert time_ratio <= BIDDING_MAX_TIME_RATIO, (
+        f"bid arm first call {bid_first:.2f}s vs grid {grid_first:.2f}s: "
+        f"ratio {time_ratio:.2f} over the {BIDDING_MAX_TIME_RATIO} ceiling")
+    assert run_ratio <= BIDDING_MAX_RUN_RATIO, (
+        f"bid arm steady state {bid_run:.3f}s vs grid {grid_run:.3f}s: "
+        f"ratio {run_ratio:.2f} over the {BIDDING_MAX_RUN_RATIO} ceiling")
+
+    rows = [dict(country=s.country, rho=s.reserve_rho,
+                 net_eur_grid_blind=float(out_blind["net_eur"][i]),
+                 net_eur_grid=float(out_grid["net_eur"][i]),
+                 net_eur_bid=float(out_bid["net_eur"][i]),
+                 penalty_eur_bid=float(out_bid["penalty_eur"][i]),
+                 n_events=int(out_bid["n_events"][i]))
+            for i, s in enumerate(specs)]
+    save_json("bidding_bench.json", dict(
+        n_scenarios=batch.n, n_ens=BID_CFG.n_ens, n_iter=BID_CFG.n_iter,
+        nets=nets, penalties=pens, net_eur_gain=gain,
+        net_eur_gain_vs_blind=gain_blind, time_ratio=time_ratio,
+        run_ratio=run_ratio, rows=rows))
+    return dict(nets=nets, net_eur_gain=gain, time_ratio=time_ratio,
+                run_ratio=run_ratio, rows=rows)
+
+
+if __name__ == "__main__":
+    run(fast=True)

@@ -19,6 +19,9 @@ import operator
 import os
 import sys
 
+from benchmarks.bidding_bench import (BIDDING_MAX_RUN_RATIO,
+                                      BIDDING_MAX_TIME_RATIO,
+                                      BIDDING_MIN_NET_EUR_GAIN)
 from benchmarks.engine_bench import (FAST_MIN_SPEEDUP_X, MIN_SPEEDUP_X,
                                      SHARDED_MIN_SPEEDUP_X,
                                      TELEMETRY_MAX_OVERHEAD_X)
@@ -58,6 +61,14 @@ def tracked_metrics(fast: bool) -> dict:
             operator.le, FLEET_PARITY_RTOL, "<="),
         "fleet.dist.parity_max_rel_err": (
             operator.le, FLEET_PARITY_RTOL, "<="),
+        # differentiable bidding: beats the price-aware grid search on
+        # settlement net at comparable compile+run cost
+        "bidding.net_eur_gain": (
+            operator.ge, BIDDING_MIN_NET_EUR_GAIN, ">="),
+        "bidding.time_ratio_x": (
+            operator.le, BIDDING_MAX_TIME_RATIO, "<="),
+        "bidding.run_ratio_x": (
+            operator.le, BIDDING_MAX_RUN_RATIO, "<="),
     }
 
 

@@ -23,11 +23,11 @@ def main(argv=None) -> int:
                     help="comma-separated subset, e.g. e1,e7")
     args = ap.parse_args(argv)
 
-    from benchmarks import (cluster_24h, e1_calibration, e2_step_response,
-                            e3_ar4, e4_closed_loop, e7_fr_latency,
-                            e8_multicountry, e9_reserve, engine_bench,
-                            engine_fleet, roofline, service_bench,
-                            workload_bench)
+    from benchmarks import (bidding_bench, cluster_24h, e1_calibration,
+                            e2_step_response, e3_ar4, e4_closed_loop,
+                            e7_fr_latency, e8_multicountry, e9_reserve,
+                            engine_bench, engine_fleet, roofline,
+                            service_bench, workload_bench)
     from benchmarks.common import emit, write_csv, write_report
     from repro.obs import trace
 
@@ -43,6 +43,7 @@ def main(argv=None) -> int:
         ("e9", lambda: e9_reserve.run(fast=args.fast)),
         ("engine", lambda: engine_bench.run(fast=args.fast)),
         ("workload", lambda: workload_bench.run(fast=args.fast)),
+        ("bidding", lambda: bidding_bench.run(fast=args.fast)),
         ("engine_sharded",
          lambda: engine_bench.run_sharded(fast=args.fast)),
         ("service", lambda: service_bench.run(fast=args.fast)),

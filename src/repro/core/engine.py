@@ -310,22 +310,33 @@ def engine_step(cfg: EngineConfig, params: EngineParams, state: EngineState,
 
 
 def _hourly_one(cfg: EngineConfig, ci, t_amb, mask, mw, pue_design,
-                product_idx, rho_batch, mix_idx) -> dict:
-    """Tier-3 grid search + hourly schedule energy/carbon accounting."""
-    green = tier3_lib.greenness_from_ci(ci, mask)
-    w_rev = cfg.w_rev if cfg.price_aware else 0.0
+                product_idx, rho_batch, mix_idx, ops=None) -> dict:
+    """Tier-3 grid search + hourly schedule energy/carbon accounting.
+
+    ``ops`` overrides the in-graph grid search with externally committed
+    hourly trajectories: a ``(mu_h, rho_h)`` pair of (H_max,) arrays (the
+    differentiable bidder's output replayed through the real settlement).
+    The ``None`` default is a static Python branch, so every existing
+    caller keeps the exact pre-override graph.
+    """
     clock_w = jnp.asarray(workload_lib.CLOCK_W)[mix_idx]
-    op = tier3_lib.select_operating_points(
-        green, t_amb, pue_aware=cfg.pue_aware, pue_design=pue_design,
-        weights=(tier3_lib.W_FFR, tier3_lib.W_CFE, w_rev,
-                 cfg.workload_weight),
-        product_idx=product_idx, events_per_day=cfg.events_per_day,
-        rho_fixed=rho_batch, clock_w=clock_w, ckpt_cost_s=cfg.ckpt_cost_s,
-        use_revenue=cfg.price_aware,
-        fix_rho=(cfg.rho_mode == "batch"),
-        use_workload=(cfg.workload_weight != 0.0))
-    mu_h = jnp.where(mask > 0, op.mu, 0.0)
-    rho_h = jnp.where(mask > 0, op.rho, 0.0)
+    if ops is None:
+        green = tier3_lib.greenness_from_ci(ci, mask)
+        w_rev = cfg.w_rev if cfg.price_aware else 0.0
+        op = tier3_lib.select_operating_points(
+            green, t_amb, pue_aware=cfg.pue_aware, pue_design=pue_design,
+            weights=(tier3_lib.W_FFR, tier3_lib.W_CFE, w_rev,
+                     cfg.workload_weight),
+            product_idx=product_idx, events_per_day=cfg.events_per_day,
+            rho_fixed=rho_batch, clock_w=clock_w, ckpt_cost_s=cfg.ckpt_cost_s,
+            use_revenue=cfg.price_aware,
+            fix_rho=(cfg.rho_mode == "batch"),
+            use_workload=(cfg.workload_weight != 0.0))
+        mu_sel, rho_sel = op.mu, op.rho
+    else:
+        mu_sel, rho_sel = ops
+    mu_h = jnp.where(mask > 0, mu_sel, 0.0)
+    rho_h = jnp.where(mask > 0, rho_sel, 0.0)
     green_ci = masked_quantile(ci, mask, 50.0)
     energy = dispatch.replay_schedule(mu_h, ci, t_amb, mask,
                                       pue_design=pue_design,
@@ -351,9 +362,9 @@ def _hourly_one(cfg: EngineConfig, ci, t_amb, mask, mw, pue_design,
 
 def _rollout_one(cfg: EngineConfig, reduce: str, ci, t_amb, mask, hours,
                  mw, pue_design, product_idx, rho_batch, mix_idx, freq,
-                 base_loads, load_key, key) -> dict:
+                 base_loads, load_key, key, ops=None) -> dict:
     out = _hourly_one(cfg, ci, t_amb, mask, mw, pue_design, product_idx,
-                      rho_batch, mix_idx)
+                      rho_batch, mix_idx, ops)
     mu_h, rho_h = out["mu_h"], out["rho_h"]
     clock_w = jnp.asarray(workload_lib.CLOCK_W)[mix_idx]
     h_max = ci.shape[-1]
@@ -520,31 +531,36 @@ def _rollout_one(cfg: EngineConfig, reduce: str, ci, t_amb, mask, hours,
 
 def _engine_seconds_vmapped(cfg: EngineConfig, reduce: str,
                             batch: ScenarioBatch, freq, base_loads,
-                            load_keys, scan_keys) -> dict:
+                            load_keys, scan_keys, ops=None) -> dict:
+    # ops=None is an empty pytree, so the uniform in_axes=0 maps it (and a
+    # None base_loads) trivially; an (N, H_max) ops pair maps per scenario.
     fn = partial(_rollout_one, cfg, reduce)
     return jax.vmap(fn)(batch.ci, batch.t_amb, batch.mask, batch.hours,
                         batch.mw, batch.pue_design, batch.product_idx,
                         batch.reserve_rho, batch.mix_idx, freq, base_loads,
-                        load_keys, scan_keys)
+                        load_keys, scan_keys, ops)
 
 
 @partial(jax.jit, static_argnames=("cfg", "reduce"))
 def _engine_seconds_jit(cfg: EngineConfig, reduce: str, batch: ScenarioBatch,
-                        freq, base_loads, load_keys, scan_keys) -> dict:
+                        freq, base_loads, load_keys, scan_keys,
+                        ops=None) -> dict:
     return _engine_seconds_vmapped(cfg, reduce, batch, freq, base_loads,
-                                   load_keys, scan_keys)
+                                   load_keys, scan_keys, ops)
 
 
-def _engine_hourly_vmapped(cfg: EngineConfig, batch: ScenarioBatch) -> dict:
+def _engine_hourly_vmapped(cfg: EngineConfig, batch: ScenarioBatch,
+                           ops=None) -> dict:
     fn = partial(_hourly_one, cfg)
     return jax.vmap(fn)(batch.ci, batch.t_amb, batch.mask, batch.mw,
                         batch.pue_design, batch.product_idx,
-                        batch.reserve_rho, batch.mix_idx)
+                        batch.reserve_rho, batch.mix_idx, ops)
 
 
 @partial(jax.jit, static_argnames=("cfg",))
-def _engine_hourly_jit(cfg: EngineConfig, batch: ScenarioBatch) -> dict:
-    return _engine_hourly_vmapped(cfg, batch)
+def _engine_hourly_jit(cfg: EngineConfig, batch: ScenarioBatch,
+                       ops=None) -> dict:
+    return _engine_hourly_vmapped(cfg, batch, ops)
 
 
 # ---------------------------------------------------------------------------
@@ -625,7 +641,7 @@ def clear_sharded_cache() -> None:
 
 
 def _sharded_seconds_fn(cfg: EngineConfig, reduce: str, mesh,
-                        has_loads: bool):
+                        has_loads: bool, has_ops: bool = False):
     """jit(shard_map(vmap(rollout))) over the scenario axis, cached per
     (static config, mesh topology) so repeated sweeps -- including ones
     that rebuild an equivalent mesh -- reuse the compiled program.
@@ -635,32 +651,35 @@ def _sharded_seconds_fn(cfg: EngineConfig, reduce: str, mesh,
     so in/out specs are uniformly P("scenario"); each device runs the
     same fused scan over its N/n_dev slice of the batch.
 
-    ``has_loads`` is part of the key only: a None vs array loads arg
-    changes the traced arg pytree.
+    ``has_loads``/``has_ops`` are part of the key only: a None vs array
+    loads/ops arg changes the traced arg pytree.
     """
-    key = ("seconds", cfg, reduce, _mesh_cache_key(mesh), has_loads)
+    key = ("seconds", cfg, reduce, _mesh_cache_key(mesh), has_loads,
+           has_ops)
     fn = _SHARDED_CACHE.get(key)
     if fn is None:
         spec = P(_SCENARIO_AXIS)
 
-        def run(batch, freq, base_loads, load_keys, scan_keys):
+        def run(batch, freq, base_loads, load_keys, scan_keys, ops):
             return _engine_seconds_vmapped(cfg, reduce, batch, freq,
-                                           base_loads, load_keys, scan_keys)
+                                           base_loads, load_keys, scan_keys,
+                                           ops)
 
         fn = jax.jit(shard_map(
-            run, mesh=mesh, in_specs=(spec, spec, spec, spec, spec),
+            run, mesh=mesh, in_specs=(spec,) * 6,
             out_specs=spec, check_rep=False))
         _SHARDED_CACHE[key] = fn
     return fn
 
 
-def _sharded_hourly_fn(cfg: EngineConfig, mesh):
-    key = ("hourly", cfg, _mesh_cache_key(mesh))
+def _sharded_hourly_fn(cfg: EngineConfig, mesh, has_ops: bool = False):
+    key = ("hourly", cfg, _mesh_cache_key(mesh), has_ops)
     fn = _SHARDED_CACHE.get(key)
     if fn is None:
+        spec = P(_SCENARIO_AXIS)
         fn = jax.jit(shard_map(
             partial(_engine_hourly_vmapped, cfg), mesh=mesh,
-            in_specs=(P(_SCENARIO_AXIS),), out_specs=P(_SCENARIO_AXIS),
+            in_specs=(spec, spec), out_specs=spec,
             check_rep=False))
         _SHARDED_CACHE[key] = fn
     return fn
@@ -710,7 +729,7 @@ def base_loads(cfg: EngineConfig, batch: ScenarioBatch) -> jax.Array:
 
 def engine_rollout(cfg: EngineConfig, batch: ScenarioBatch, *,
                    reduce: str = "summary", freq=None, loads=None,
-                   mesh=None) -> dict:
+                   ops=None, mesh=None) -> dict:
     """Replay a ScenarioBatch through all composed tiers in ONE compiled
     ``jit(vmap(lax.scan))`` call.
 
@@ -727,6 +746,12 @@ def engine_rollout(cfg: EngineConfig, batch: ScenarioBatch, *,
     are generated *in-scan* from the counter-based PRNG, so the rollout's
     peak input memory is O(N*H_max) -- no (N, T, H) buffer exists unless
     the caller materialises one.
+
+    ``ops`` replays externally committed hourly trajectories through the
+    real settlement instead of the in-graph Tier-3 search: a
+    ``(mu_h, rho_h)`` pair of (N, H_max) arrays (the differentiable
+    bidder's output, ``repro.optim.bidding``).  ``None`` (the default)
+    keeps the pre-override graph bit-identical.
 
     With ``cfg.telemetry=True`` the output gains a ``"telemetry"`` dict
     (per-hour health moments, day-level histograms, per-event response
@@ -747,11 +772,24 @@ def engine_rollout(cfg: EngineConfig, batch: ScenarioBatch, *,
         raise ValueError(f"reduce must be 'summary' or 'full', got {reduce!r}")
     if mesh is not None:
         mesh = _resolve_mesh(mesh)
+    if ops is not None:
+        mu_ops, rho_ops = ops
+        want = (batch.n, int(batch.h_max))
+        mu_ops = jnp.asarray(mu_ops, jnp.float32)
+        rho_ops = jnp.asarray(rho_ops, jnp.float32)
+        if mu_ops.shape != want or rho_ops.shape != want:
+            raise ValueError(
+                f"ops override must be a (mu_h, rho_h) pair of shape "
+                f"(N, H_max) = {want}, got {mu_ops.shape} / "
+                f"{rho_ops.shape}")
+        ops = (mu_ops, rho_ops)
     if not cfg.with_seconds:
         if mesh is None:
-            return _engine_hourly_jit(cfg, batch)
-        padded, n = pad_scenario_axis(batch, mesh.shape[_SCENARIO_AXIS])
-        return unpad_scenario_axis(_sharded_hourly_fn(cfg, mesh)(padded), n)
+            return _engine_hourly_jit(cfg, batch, ops)
+        (padded, ops_p), n = pad_scenario_axis(
+            (batch, ops), mesh.shape[_SCENARIO_AXIS])
+        fn = _sharded_hourly_fn(cfg, mesh, ops is not None)
+        return unpad_scenario_axis(fn(padded, ops_p), n)
     n, T = batch.n, int(batch.h_max) * 3600
     if freq is None:
         freq, _ = frequency.synthesize_frequency_batch(
@@ -770,10 +808,12 @@ def engine_rollout(cfg: EngineConfig, batch: ScenarioBatch, *,
     load_keys, scan_keys = scenario_keys(batch)
     if mesh is None:
         return _engine_seconds_jit(cfg, reduce, batch, freq, loads,
-                                   load_keys, scan_keys)
-    args, n = pad_scenario_axis((batch, freq, loads, load_keys, scan_keys),
-                                mesh.shape[_SCENARIO_AXIS])
-    fn = _sharded_seconds_fn(cfg, reduce, mesh, loads is not None)
+                                   load_keys, scan_keys, ops)
+    args, n = pad_scenario_axis(
+        (batch, freq, loads, load_keys, scan_keys, ops),
+        mesh.shape[_SCENARIO_AXIS])
+    fn = _sharded_seconds_fn(cfg, reduce, mesh, loads is not None,
+                             ops is not None)
     return unpad_scenario_axis(fn(*args), n)
 
 

@@ -64,13 +64,21 @@ TELEMETRY_HZ = 100.0   # NVML sampling analogue
 CONTROL_HZ = 200.0     # Tier-1 tick
 
 
+def _farr(x) -> jax.Array:
+    """float32 unless the input is already a wider float (the x64
+    gradcheck harness); f32 and weakly-typed inputs keep the exact
+    pre-existing float32 graph."""
+    x = jnp.asarray(x)
+    return x.astype(jnp.result_type(x.dtype, jnp.float32))
+
+
 def power_model(f_mhz, load, *, p_idle=P_IDLE, a=ALPHA, b=BETA, g=GAMMA):
     """Steady-state board power at SM clock `f_mhz` and utilisation `load`.
 
     Voltage floor: below F_VMIN the V^2 term stops scaling with f^2.
     """
-    f = jnp.asarray(f_mhz, jnp.float32)
-    L = jnp.asarray(load, jnp.float32)
+    f = _farr(f_mhz)
+    L = _farr(load)
     f2 = jnp.where(f >= F_VMIN, f * f, f * F_VMIN)
     return p_idle + a * f + b * f2 * L + g * L
 
@@ -80,8 +88,8 @@ def freq_at_cap(cap, load, *, a=ALPHA, b=BETA, g=GAMMA, p_idle=P_IDLE):
 
     Branch-aware in the voltage floor; clipped to [F_MIN, F_MAX].
     """
-    cap = jnp.asarray(cap, jnp.float32)
-    L = jnp.maximum(jnp.asarray(load, jnp.float32), 1e-3)
+    cap = _farr(cap)
+    L = jnp.maximum(_farr(load), 1e-3)
     budget = cap - p_idle - g * L
     # quadratic branch: b*L*f^2 + a*f - budget = 0
     disc = a * a + 4.0 * b * L * jnp.maximum(budget, 0.0)

@@ -26,6 +26,14 @@ PUMP_FLOOR = 0.20        # bypass-flow floor (fraction of design pump power)
 AIR_FLOOR = 0.15         # minimum-controllability floor
 T_REF = 18.0             # degC reference ambient used for calibration
 
+def _farr(x) -> jax.Array:
+    """float32 unless the input is already a wider float (the x64
+    gradcheck harness); f32 and weakly-typed inputs keep the exact
+    pre-existing float32 graph."""
+    x = jnp.asarray(x)
+    return x.astype(jnp.result_type(x.dtype, jnp.float32))
+
+
 # Design-point split of the (PUE-1) overhead into the four components.
 # Chiller dominates on a chilled-water site; pumps/air/misc share the rest.
 CHILLER_SHARE = 0.55
@@ -36,7 +44,7 @@ MISC_SHARE = 0.12
 
 def free_cooling_fraction(t_amb) -> jax.Array:
     """f_fc(T_amb): 0 at >=25 degC, 1 at <=12 degC, linear between."""
-    t = jnp.asarray(t_amb, jnp.float32)
+    t = _farr(t_amb)
     return jnp.clip((T_FREECOOL_HI - t) / (T_FREECOOL_HI - T_FREECOOL_LO),
                     0.0, 1.0)
 
@@ -47,7 +55,7 @@ def _overhead_design(pue_design=PUE_DESIGN) -> jax.Array:
     Accepts a scalar, an array, or a traced per-scenario value (the E9
     design-sensitivity axis of the batched sweep).
     """
-    return jnp.asarray(pue_design, jnp.float32) - 1.0
+    return _farr(pue_design) - 1.0
 
 
 def pue(load, t_amb, *, pue_design: float = PUE_DESIGN) -> jax.Array:
@@ -61,7 +69,7 @@ def pue(load, t_amb, *, pue_design: float = PUE_DESIGN) -> jax.Array:
     PUE divides by the *actual* IT power L * P_design, which is what drives
     the overhead fraction UP as the controller sheds IT load.
     """
-    L = jnp.clip(jnp.asarray(load, jnp.float32), 1e-3, 1.0)
+    L = jnp.clip(_farr(load), 1e-3, 1.0)
     oh = _overhead_design(pue_design)
     f_fc = free_cooling_fraction(t_amb)
     f_ref = free_cooling_fraction(T_REF)
@@ -95,7 +103,7 @@ def ffr_meter_gain(mu, rho, t_amb, *, pue_design: float = PUE_DESIGN):
     (the L^2/L^3 floors bind), this is < 1: the under-delivery the paper
     quantifies as 4-7 pp.  Tier-3 uses this to evaluate Q_FFR at the meter.
     """
-    rho = jnp.maximum(jnp.asarray(rho, jnp.float32), 1e-6)
+    rho = jnp.maximum(_farr(rho), 1e-6)
     hi = facility_power(mu, 1.0, t_amb, pue_design=pue_design)
     lo = facility_power(jnp.maximum(mu - rho, 0.02), 1.0, t_amb,
                         pue_design=pue_design)

@@ -65,6 +65,18 @@ class OperatingPoint(NamedTuple):
     rho: jax.Array   # committed FR reserve band (fraction of design IT)
 
 
+def _farr(x) -> jax.Array:
+    """float32 unless the input is already a wider float.
+
+    Every f32 (and weakly-typed) input produces the exact pre-existing
+    float32 graph; float64 inputs under ``jax.experimental.enable_x64``
+    keep full precision so the finite-difference gradcheck harness can
+    compare against ``jax.grad`` below f32 roundoff.
+    """
+    x = jnp.asarray(x)
+    return x.astype(jnp.result_type(x.dtype, jnp.float32))
+
+
 def q_ffr(mu, rho, t_amb, *, pue_aware: bool, pue_design=pue_lib.PUE_DESIGN):
     """Relative FR-provision quality in [0, 1], evaluated at the meter.
 
@@ -76,8 +88,8 @@ def q_ffr(mu, rho, t_amb, *, pue_aware: bool, pue_design=pue_lib.PUE_DESIGN):
     its IT-side band so the meter delta matches the commitment (accuracy
     ~1); a PUE-blind one under-delivers when the marginal PUE < static.
     """
-    mu = jnp.asarray(mu, jnp.float32)
-    rho = jnp.asarray(rho, jnp.float32)
+    mu = _farr(mu)
+    rho = _farr(rho)
     feasible = (mu - rho) >= MIN_RESIDUAL_LOAD
     committed_meter = rho * pue_design  # static-PUE bid
     if pue_aware:
@@ -108,7 +120,7 @@ def cfe_score(mu, greenness) -> jax.Array:
     greenness in [0,1] is the normalised inverse CI of the hour.  Running
     high in green hours scores; running high in dirty hours anti-scores.
     """
-    mu = jnp.asarray(mu, jnp.float32)
+    mu = _farr(mu)
     mu_n = mu / float(MU_GRID[-1])
     return greenness * mu_n + (1.0 - greenness) * (1.0 - mu_n)
 
@@ -130,8 +142,8 @@ def event_verdict(mu, t_amb, rho, product_idx, pue_design,
     engine), the Python reference loop, and the Tier-3 revenue term so
     verdicts agree bit-for-bit.
     """
-    mu = jnp.maximum(jnp.asarray(mu, jnp.float32), 1e-3)
-    rho = jnp.asarray(rho, jnp.float32)
+    mu = jnp.maximum(_farr(mu), 1e-3)
+    rho = _farr(rho)
     if pue_aware:
         # invert the meter gain so the metered delta hits the static-PUE
         # commitment (q_ffr's correction, applied at dispatch time)
@@ -173,12 +185,12 @@ def revenue_score(mu, rho, t_amb, product_idx, *, pue_aware: bool,
     feedback: cells whose governor-limited ``t_full`` or PUE shortfall
     would forfeit revenue score negative and are avoided.
     """
-    rho = jnp.asarray(rho, jnp.float32)
+    rho = _farr(rho)
     v = event_verdict(mu, t_amb, rho, product_idx, pue_design,
                       pue_aware=pue_aware)
     shortfall = jnp.clip(1.0 - v["delivered_frac"], 0.0, 1.0)
     hard_miss = 1.0 - v["budget_ok"].astype(jnp.float32)
-    ev_per_h = jnp.asarray(events_per_day, jnp.float32) / 24.0
+    ev_per_h = _farr(events_per_day) / 24.0
     at_risk = ev_per_h * PENALTY_WINDOW_H * (shortfall + hard_miss)
     net = (rho / RHO_MAX) * (1.0 - at_risk)
     return jnp.clip(net, -1.0, 1.0)
@@ -206,17 +218,17 @@ def throughput_score(mu, rho, clock_w, product_idx, *,
     selector toward higher mu and smaller committed bands exactly when
     the tokens forfeited outweigh the reserve revenue.
     """
-    mu = jnp.asarray(mu, jnp.float32)
-    rho = jnp.asarray(rho, jnp.float32)
+    mu = _farr(mu)
+    rho = _farr(rho)
     g_run = workload_lib.throughput_frac(clock_w, mu)
     resid = jnp.maximum(mu - rho, MIN_RESIDUAL_LOAD)
     g_shed = workload_lib.throughput_frac(clock_w, resid)
-    ev_per_h = jnp.asarray(events_per_day, jnp.float32) / 24.0
+    ev_per_h = _farr(events_per_day) / 24.0
     dur_s = jnp.asarray(markets.MIN_DURATION_S)[product_idx]
     has_band = (rho > 0.0).astype(jnp.float32)
     shed_frac = jnp.clip(ev_per_h * dur_s / 3600.0, 0.0, 1.0) * has_band
     dead_frac = jnp.clip(
-        ev_per_h * jnp.asarray(ckpt_cost_s, jnp.float32) / 3600.0,
+        ev_per_h * _farr(ckpt_cost_s) / 3600.0,
         0.0, 1.0) * has_band
     dead_frac = jnp.minimum(dead_frac, 1.0 - shed_frac)
     tokens = (1.0 - shed_frac - dead_frac) * g_run + shed_frac * g_shed
@@ -234,6 +246,48 @@ def throughput_score(mu, rho, clock_w, product_idx, *,
 SELECT_TRACE_COUNT = {"n": 0}
 
 
+def grid_candidates(rho_fixed=0.0, *, fix_rho: bool = False):
+    """The selector's candidate mesh: (MU, RHO) of shape (6, R).
+
+    Shared by the grid search below and by the differentiable bidder
+    (``repro.optim.bidding``), whose grid-initialised argmax must be
+    bit-identical to :func:`select_operating_points`.
+    """
+    mus = jnp.asarray(MU_GRID, jnp.float32)
+    rhos = (jnp.reshape(jnp.asarray(rho_fixed, jnp.float32), (1,))
+            if fix_rho else jnp.asarray(RHO_GRID, jnp.float32))
+    return jnp.meshgrid(mus, rhos, indexing="ij")
+
+
+def point_objective(mu, rho, greenness, t_amb, weights, product_idx,
+                    events_per_day, clock_w, ckpt_cost_s, *,
+                    pue_aware: bool, use_revenue: bool, use_workload: bool,
+                    pue_design=pue_lib.PUE_DESIGN, price_rel=None):
+    """The hourly selection objective J(mu, rho) at arbitrary points.
+
+    Exactly the term order the grid search compiles -- q/cfe always,
+    revenue and throughput gated by their static flags -- so any caller
+    evaluating grid candidates through this function reproduces
+    ``select_operating_points`` bit-for-bit.  ``price_rel`` (the bidder's
+    capacity-price realisation relative to nominal) scales the revenue
+    term; ``None`` omits the multiply entirely, keeping the legacy graph.
+    """
+    q = q_ffr(mu, rho, t_amb, pue_aware=pue_aware, pue_design=pue_design)
+    J = weights[0] * q + weights[1] * cfe_score(mu, greenness)
+    if use_revenue:
+        rev = revenue_score(
+            mu, rho, t_amb, product_idx, pue_aware=pue_aware,
+            pue_design=pue_design, events_per_day=events_per_day)
+        if price_rel is not None:
+            rev = price_rel * rev
+        J = J + weights[2] * rev
+    if use_workload:
+        J = J + weights[3] * throughput_score(
+            mu, rho, clock_w, product_idx,
+            events_per_day=events_per_day, ckpt_cost_s=ckpt_cost_s)
+    return J
+
+
 def _select_impl(greenness, t_amb, weights, pue_design, product_idx,
                  events_per_day, rho_fixed, clock_w, ckpt_cost_s, *,
                  pue_aware: bool, use_revenue: bool, fix_rho: bool,
@@ -243,23 +297,13 @@ def _select_impl(greenness, t_amb, weights, pue_design, product_idx,
     clock_w, ckpt cost) are traced operands so selector instances share
     the compile cache."""
     SELECT_TRACE_COUNT["n"] += 1
-    mus = jnp.asarray(MU_GRID, jnp.float32)
-    rhos = (jnp.reshape(jnp.asarray(rho_fixed, jnp.float32), (1,))
-            if fix_rho else jnp.asarray(RHO_GRID, jnp.float32))
-    MU, RHO = jnp.meshgrid(mus, rhos, indexing="ij")   # (6, R)
+    MU, RHO = grid_candidates(rho_fixed, fix_rho=fix_rho)   # (6, R)
     g = greenness[:, None, None]
     ta = t_amb[:, None, None]
-    q = q_ffr(MU[None], RHO[None], ta, pue_aware=pue_aware,
-              pue_design=pue_design)
-    J = weights[0] * q + weights[1] * cfe_score(MU[None], g)
-    if use_revenue:
-        J = J + weights[2] * revenue_score(
-            MU[None], RHO[None], ta, product_idx, pue_aware=pue_aware,
-            pue_design=pue_design, events_per_day=events_per_day)
-    if use_workload:
-        J = J + weights[3] * throughput_score(
-            MU[None], RHO[None], clock_w, product_idx,
-            events_per_day=events_per_day, ckpt_cost_s=ckpt_cost_s)
+    J = point_objective(
+        MU[None], RHO[None], g, ta, weights, product_idx, events_per_day,
+        clock_w, ckpt_cost_s, pue_aware=pue_aware, use_revenue=use_revenue,
+        use_workload=use_workload, pue_design=pue_design)
     flat = J.reshape(J.shape[0], -1)
     idx = jnp.argmax(flat, axis=-1)
     return MU.reshape(-1)[idx], RHO.reshape(-1)[idx]

@@ -223,6 +223,17 @@ def frequency_seeds(batch: ScenarioBatch) -> jax.Array:
             + jnp.asarray(batch.seed, jnp.uint32))
 
 
+def bidding_seeds(batch: ScenarioBatch) -> jax.Array:
+    """Deterministic per-scenario seed for the Tier-3 bidding optimiser's
+    forecast ensemble (``repro.optim.bidding``): decorrelated from the
+    frequency-synthesis stream by a different multiplier/offset, so the
+    bidder's price/CI/frequency perturbations never alias the realised
+    grid-event day it is later settled against.  Same counter-based
+    trace-key convention as :func:`frequency_seeds`."""
+    return (jnp.asarray(batch.event_seed, jnp.uint32) * 1_000_003
+            + jnp.asarray(batch.seed, jnp.uint32) * 97 + 7)
+
+
 def masked_quantile_sorted(xs: jax.Array, n_valid, q: float) -> jax.Array:
     """Quantile from an ascending-sorted array whose first ``n_valid``
     entries are the valid ones (invalid sorted to +inf).  Exists so a sort

@@ -8,9 +8,19 @@ from repro.optim.compress import (
     quantize_int8,
     dequantize_int8,
 )
+from repro.optim.bidding import (
+    BidConfig,
+    BidEnsemble,
+    BidResult,
+    bids_for_batch,
+    ensemble_objective,
+    optimize_bids,
+)
 
 __all__ = [
     "AdamWState", "adamw_init", "adamw_update", "warmup_cosine",
     "CompressionState", "compress_init", "ef_compress", "ef_decompress",
     "quantize_int8", "dequantize_int8",
+    "BidConfig", "BidEnsemble", "BidResult", "bids_for_batch",
+    "ensemble_objective", "optimize_bids",
 ]

@@ -107,8 +107,10 @@ def throughput_frac(clock_w, power_frac) -> jax.Array:
     floor and at TDP), and exactly 1.0 at full power -- so it is usable
     both as a scan-side accumulator weight and under ``jax.grad``.
     """
-    clock_w = jnp.asarray(clock_w, jnp.float32)
-    p = jnp.asarray(power_frac, jnp.float32)
+    clock_w = jnp.asarray(clock_w)
+    clock_w = clock_w.astype(jnp.result_type(clock_w.dtype, jnp.float32))
+    p = jnp.asarray(power_frac)
+    p = p.astype(jnp.result_type(p.dtype, jnp.float32))
     f = plant.freq_at_cap(jnp.clip(p, P_FLOOR_FRAC, 1.0) * plant.TDP, 1.0)
     clock = f / F_AT_TDP
     mem = (0.45 + 0.55 * f / plant.F_NOMINAL) / _MEM_AT_TDP

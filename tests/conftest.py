@@ -8,3 +8,22 @@ sys.path.insert(0, os.path.join(_root, "src"))
 # repo root, so the sweep-engine tests can import the benchmarks package
 # (benchmarks/e8_multicountry.py hosts the vmapped E8 sweep under test)
 sys.path.insert(0, _root)
+
+# Deterministic hypothesis profile for CI: derandomized (fixed example
+# stream run-to-run), bounded example budget, no deadline (jit compiles
+# on the first example dwarf any per-example budget).  Guarded: the
+# container may only have the tests/_hypothesis_compat.py shim, whose
+# no-op settings has no register_profile.
+try:
+    from hypothesis import HealthCheck, settings as _hyp_settings
+
+    _hyp_settings.register_profile(
+        "ci",
+        derandomize=True,
+        deadline=None,
+        max_examples=24,
+        suppress_health_check=list(HealthCheck),
+    )
+    _hyp_settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "ci"))
+except ImportError:
+    pass
